@@ -1,0 +1,72 @@
+"""Paper §5.4: cleanup throughput vs removal fraction, cleanup vs rebuild,
+and the query-speedup-after-cleanup experiment."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import (
+    LSMConfig,
+    lsm_bulk_build,
+    lsm_cleanup,
+    lsm_delete,
+    lsm_init,
+    lsm_insert,
+    lsm_lookup,
+)
+
+
+def _build_with_deletes(cfg, n, frac_deleted, rng):
+    b = cfg.batch_size
+    keys = rng.choice(1 << 29, n, replace=False).astype(np.int32)
+    state = lsm_init(cfg)
+    ins = jax.jit(functools.partial(lsm_insert, cfg), donate_argnums=0)
+    dele = jax.jit(functools.partial(lsm_delete, cfg), donate_argnums=0)
+    for r in range(n // b):
+        state = ins(state, jnp.asarray(keys[r * b : (r + 1) * b]),
+                    jnp.asarray(keys[r * b : (r + 1) * b] % 997))
+    n_del = int(n * frac_deleted)
+    for r in range(max(1, n_del // b)):
+        state = dele(state, jnp.asarray(keys[r * b : (r + 1) * b]))
+    return state, keys
+
+
+def run(log_n: int = 18, log_b: int = 14) -> None:
+    n, b = 1 << log_n, 1 << log_b
+    num_levels = int(np.ceil(np.log2(n // b + 1))) + 1
+    cfg = LSMConfig(batch_size=b, num_levels=num_levels)
+    rng = np.random.default_rng(4)
+    clean = jax.jit(functools.partial(lsm_cleanup, cfg))
+
+    for frac in (0.1, 0.5):
+        state, keys = _build_with_deletes(cfg, n, frac, rng)
+        resident = int(state.r) * b
+        t = time_fn(clean, state, warmup=1, iters=3)
+        emit(f"cleanup/frac{int(frac * 100)}", t,
+             f"{resident / t / 1e6:.1f}Melem/s (paper: ~1800 M/s @K40c)")
+
+    # cleanup vs from-scratch rebuild (sort of all resident elements)
+    state, keys = _build_with_deletes(cfg, n, 0.1, rng)
+    bb = jax.jit(functools.partial(lsm_bulk_build, cfg))
+    t_re = time_fn(bb, jnp.asarray(keys), jnp.zeros(n, jnp.int32), warmup=1, iters=3)
+    t_cl = time_fn(clean, state, warmup=1, iters=3)
+    emit("cleanup/vs_rebuild", t_cl, f"speedup={t_re / t_cl:.2f}x (paper: up to 2.5x)")
+
+    # queries after cleanup (paper: 4.8x incl. cleanup time at r=2^7-1)
+    look = jax.jit(functools.partial(lsm_lookup, cfg))
+    q = jnp.asarray(rng.choice(keys, n // 4))
+    t_before = time_fn(look, state, q, warmup=1, iters=3)
+    cleaned = clean(state)
+    t_after = time_fn(look, cleaned, q, warmup=1, iters=3)
+    emit("cleanup/query_speedup", t_after,
+         f"lookup_before={t_before * 1e3:.1f}ms after={t_after * 1e3:.1f}ms "
+         f"speedup={t_before / t_after:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Benchmark utilities: wall-clock timing of jitted callables + CSV emission.
+
+Output convention (assignment): ``name,us_per_call,derived`` where `derived`
+is the paper's headline unit for that table (M elements/s or M queries/s).
+
+Scaling note: the paper's Tesla K40c tables use n=2^27 elements; this CPU
+container runs the same experiment *protocols* at reduced n (scales recorded
+in each table's output) — the comparisons (LSM vs SA vs cuckoo ratios) are the
+reproduction target, not the absolute K40c numbers. EXPERIMENTS.md §Paper
+discusses the mapping.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup=2, iters=5, **kwargs):
+    """Median wall-time of fn(*args) with block_until_ready, in seconds."""
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, seconds: float, derived: str):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def hmean(xs):
+    xs = [x for x in xs if x > 0]
+    return len(xs) / sum(1.0 / x for x in xs) if xs else 0.0

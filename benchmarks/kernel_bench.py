@@ -1,0 +1,44 @@
+"""Kernel-level microbenchmarks: XLA reference path vs Pallas (interpret-mode
+numbers are NOT wall-time-meaningful on CPU — this bench times the XLA path
+and reports the Pallas kernels' roofline-derived expectations for v5e)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ref
+
+HBM_BW = 819e9  # v5e bytes/s
+
+
+def run(log_n: int = 20) -> None:
+    n = 1 << log_n
+    rng = np.random.default_rng(5)
+    a = jnp.asarray(np.sort(rng.integers(0, 1 << 29, n)).astype(np.int32))
+    b = jnp.asarray(np.sort(rng.integers(0, 1 << 29, n)).astype(np.int32))
+    va = jnp.arange(n, dtype=jnp.int32)
+
+    merge = jax.jit(ref.merge_ref)
+    t = time_fn(merge, a, va, b, va, warmup=1, iters=3)
+    emit("kernel/merge_xla", t, f"{2 * n / t / 1e6:.1f}Melem/s")
+    # v5e expectation: Merge-Path kernel is stream-bound: 2n*(2 arrays*4B)*(r+w)
+    bytes_moved = 2 * n * 4 * 2 * 2
+    emit("kernel/merge_v5e_roofline", bytes_moved / HBM_BW,
+         f"{2 * n / (bytes_moved / HBM_BW) / 1e6:.0f}Melem/s_bound")
+
+    sort = jax.jit(ref.sort_ref)
+    kv = jnp.asarray(rng.integers(0, 1 << 29, n).astype(np.int32))
+    t = time_fn(sort, kv, va, warmup=1, iters=3)
+    emit("kernel/sort_xla", t, f"{n / t / 1e6:.1f}Melem/s")
+
+    q = jnp.asarray(rng.integers(0, 1 << 29, 1 << 16).astype(np.int32))
+    lb = jax.jit(ref.lower_bound_ref)
+    t = time_fn(lb, a, q, warmup=1, iters=3)
+    emit("kernel/lower_bound_xla", t, f"{q.shape[0] / t / 1e6:.1f}Mq/s")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""Render results/ROOFLINE.md: baseline vs optimized roofline tables + summary.
+
+  PYTHONPATH=src python -m benchmarks.make_roofline_report
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HW_NOTE = (
+    "TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI. "
+    "Terms are seconds/step/chip from the exact-loop-accounting dry-run "
+    "(see EXPERIMENTS.md §Roofline for method + the bytes-accessed caveat)."
+)
+
+MOVE_NOTES = {
+    "compute": "reduce recompute (remat policy) / padding waste",
+    "memory": "fuse or shrink activation traffic: bf16 score chains, remat policy, smaller logits dtype",
+    "collective": "sharding: ZeRO-3 regather, sharded loss, seq-sharded attention",
+}
+
+
+def load(dir_):
+    recs = {}
+    for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("status") == "ok":
+            recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def main():
+    base = load("results/roofline_base")
+    opt = load("results/roofline_opt")
+    lines = ["# Roofline — single pod (16x16 = 256 chips)", "", HW_NOTE, ""]
+
+    lines += ["## Baseline (paper-faithful distribution) vs optimized recipe", ""]
+    hdr = ("arch", "shape", "base: comp/mem/coll (s)", "base frac", "base dom",
+           "opt: comp/mem/coll (s)", "opt frac", "gain", "bottleneck note")
+    lines.append("| " + " | ".join(hdr) + " |")
+    lines.append("|" + "---|" * len(hdr))
+    gains = []
+    for key in sorted(base):
+        b = base[key]["roofline"]
+        o = opt.get(key, {}).get("roofline")
+        bcell = f"{b['compute_s']:.2f}/{b['memory_s']:.2f}/{b['collective_s']:.2f}"
+        brow = [key[0], key[1], bcell, f"{b['roofline_fraction']:.4f}", b["dominant"]]
+        if o:
+            ocell = f"{o['compute_s']:.2f}/{o['memory_s']:.2f}/{o['collective_s']:.2f}"
+            gain = o["roofline_fraction"] / max(b["roofline_fraction"], 1e-9)
+            gains.append(gain)
+            brow += [ocell, f"{o['roofline_fraction']:.4f}", f"{gain:.1f}x",
+                     MOVE_NOTES[o["dominant"]]]
+        else:
+            brow += ["-", "-", "-", MOVE_NOTES[b["dominant"]]]
+        lines.append("| " + " | ".join(brow) + " |")
+
+    if gains:
+        import statistics
+
+        lines += ["",
+                  f"**Summary**: optimized recipe improves the roofline fraction on "
+                  f"{sum(g > 1.05 for g in gains)}/{len(gains)} cells; median gain "
+                  f"{statistics.median(gains):.1f}x, max {max(gains):.1f}x.", ""]
+    os.makedirs("results", exist_ok=True)
+    with open("results/ROOFLINE.md", "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print("\n".join(lines[:40]))
+    print(f"... written to results/ROOFLINE.md ({len(lines)} lines)")
+
+
+if __name__ == "__main__":
+    main()

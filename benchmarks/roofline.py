@@ -1,0 +1,71 @@
+"""Aggregate dry-run JSONs into the §Roofline table (markdown + CSV).
+
+  PYTHONPATH=src python -m benchmarks.roofline --dir results/dryrun [--mesh 16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str, mesh: str | None = None):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_table(recs, md=True):
+    rows = []
+    header = ("arch", "shape", "mesh", "compute_ms", "memory_ms", "coll_ms",
+              "dominant", "useful_flop_ratio", "roofline_frac")
+    for r in recs:
+        if r.get("status") != "ok":
+            rows.append((r["arch"], r["shape"], r.get("mesh", "?"), "-", "-", "-",
+                         "ERROR", "-", "-"))
+            continue
+        ro = r["roofline"]
+        rows.append((
+            r["arch"], r["shape"], r["mesh"],
+            f"{ro['compute_s']*1e3:.2f}", f"{ro['memory_s']*1e3:.2f}",
+            f"{ro['collective_s']*1e3:.2f}", ro["dominant"],
+            f"{ro['useful_flop_ratio']:.3f}", f"{ro['roofline_fraction']:.3f}",
+        ))
+    if md:
+        out = ["| " + " | ".join(header) + " |",
+               "|" + "---|" * len(header)]
+        out += ["| " + " | ".join(str(c) for c in row) + " |" for row in rows]
+    else:
+        out = [",".join(header)] + [",".join(str(c) for c in row) for row in rows]
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.dir, args.mesh)
+    print(fmt_table(recs, md=not args.csv))
+    ok = [r for r in recs if r.get("status") == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+        coll = max(ok, key=lambda r: r["roofline"]["collective_s"]
+                   / max(1e-12, max(r["roofline"]["compute_s"], r["roofline"]["memory_s"])))
+        print(f"\n# cells: {len(ok)} ok / {len(recs)} total")
+        print(f"# worst roofline fraction: {worst['arch']}/{worst['shape']}/{worst['mesh']} "
+              f"= {worst['roofline']['roofline_fraction']:.4f}")
+        print(f"# most collective-bound: {coll['arch']}/{coll['shape']}/{coll['mesh']} "
+              f"(coll {coll['roofline']['collective_s']*1e3:.1f}ms)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Quickstart: the GPU-LSM dictionary on TPU/JAX in 60 seconds.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    LSMConfig,
+    lsm_cleanup,
+    lsm_count,
+    lsm_delete,
+    lsm_init,
+    lsm_insert,
+    lsm_lookup,
+    lsm_range,
+    lsm_valid_count,
+)
+
+
+def main():
+    # b = 1024-element batches, 10 levels => capacity ~1M elements.
+    cfg = LSMConfig(batch_size=1024, num_levels=10)
+    state = lsm_init(cfg)
+
+    insert = jax.jit(functools.partial(lsm_insert, cfg), donate_argnums=0)
+    delete = jax.jit(functools.partial(lsm_delete, cfg), donate_argnums=0)
+    lookup = jax.jit(functools.partial(lsm_lookup, cfg))
+
+    # 1) batch inserts — the only way in (bulk-synchronous, sorted + merged)
+    for batch in range(4):
+        keys = jnp.arange(1024) + batch * 1024
+        state = insert(state, keys, keys * 10)
+    print(f"inserted 4 batches; resident batches r={int(state.r)} "
+          f"(levels full where bits of r are set: {int(state.r):b})")
+
+    # 2) point lookups — most-recent value wins
+    found, vals = lookup(state, jnp.array([0, 1500, 4095, 99999]))
+    print("lookup [0, 1500, 4095, 99999]:", found.tolist(), vals.tolist())
+
+    # 3) overwrite: re-insert key 0 with a new value
+    state = insert(state, jnp.arange(1024), jnp.full((1024,), 777))
+    _, vals = lookup(state, jnp.array([0]))
+    print("after overwrite, key 0 ->", int(vals[0]))
+
+    # 4) delete a batch (tombstones)
+    state = delete(state, jnp.arange(1024) + 1024)
+    found, _ = lookup(state, jnp.array([1500]))
+    print("key 1500 after delete:", bool(found[0]))
+
+    # 5) ordered queries (hash tables can't do this)
+    counts, ok = lsm_count(cfg, state, jnp.array([0, 2048]), jnp.array([4095, 3000]), 1 << 14)
+    print(f"COUNT[0,4095]={int(counts[0])}  COUNT[2048,3000]={int(counts[1])} (exact={bool(ok.all())})")
+    keys, vals, cnt, ok = lsm_range(cfg, state, jnp.array([2040]), jnp.array([2050]), 256, 16)
+    print("RANGE[2040,2050] ->", keys[0][: int(cnt[0])].tolist())
+
+    # 6) cleanup: purge tombstones + duplicates, shrink levels
+    live = int(lsm_valid_count(cfg, state))
+    state = lsm_cleanup(cfg, state)
+    print(f"cleanup: {live} live elements packed into r={int(state.r)} batches")
+
+
+if __name__ == "__main__":
+    main()

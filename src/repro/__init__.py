@@ -1,0 +1,3 @@
+"""repro: TPU LSM dictionary runtime + multi-pod JAX LM framework."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,151 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic (mesh-agnostic).
+
+Format: one directory per step — `step_<n>/` with one .npy per pytree leaf
+(path-encoded filenames) + a JSON manifest. Writes go to `step_<n>.tmp/` and
+are renamed into place (atomic on POSIX), so a host failure mid-write can
+never corrupt the latest checkpoint. Restore never needs the saving mesh:
+leaves are plain host arrays and are re-placed under whatever shardings the
+*current* mesh prescribes — this is what makes elastic re-scaling (restart on
+a different pod count) a restore-time no-op.
+
+Async mode hands the device->host copy + file write to a background thread; the
+training loop only blocks if a previous save is still in flight (single
+in-flight save, bounded memory).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.-]+")
+
+# numpy can't serialize ml_dtypes (bf16/fp8) natively: store a same-width
+# integer view and round-trip the true dtype through the manifest.
+_VIEW_FOR = {
+    np.dtype(ml_dtypes.bfloat16): np.uint16,
+    np.dtype(ml_dtypes.float8_e4m3fn): np.uint8,
+    np.dtype(ml_dtypes.float8_e5m2): np.uint8,
+}
+
+
+def _to_storable(arr: np.ndarray):
+    view = _VIEW_FOR.get(arr.dtype)
+    return (arr.view(view), str(arr.dtype)) if view else (arr, str(arr.dtype))
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if arr.dtype.kind in "ui" and dtype_name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+        return arr.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+    return arr
+
+
+def _leaf_filename(path_str: str) -> str:
+    return _SAFE.sub("_", path_str).strip("_") + ".npy"
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree) -> None:
+        """Snapshot `tree` at `step` (blocking unless async_save)."""
+        # Device->host copy happens on the caller thread (arrays may be
+        # donated/overwritten by the next step); file IO can be deferred.
+        flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+        host = [(jax.tree_util.keystr(p), np.asarray(l)) for p, l in flat]
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_leaves) -> None:
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "time": time.time(), "leaves": []}
+        for path_str, arr in host_leaves:
+            fname = _leaf_filename(path_str)
+            storable, dtype_name = _to_storable(arr)
+            np.save(os.path.join(tmp, fname), storable)
+            manifest["leaves"].append({"path": path_str, "file": fname,
+                                       "shape": list(arr.shape), "dtype": dtype_name})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target_tree, shardings=None):
+        """Rebuild `target_tree`'s structure from disk.
+
+        shardings: optional matching tree of NamedSharding — leaves are placed
+        directly under the current mesh (elastic restore).
+        """
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_path = {e["path"]: e for e in manifest["leaves"]}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+        sh_flat = None
+        if shardings is not None:
+            sh_flat = jax.tree_util.tree_flatten(shardings)[0]
+        leaves = []
+        for i, (p, spec) in enumerate(flat):
+            path_str = jax.tree_util.keystr(p)
+            entry = by_path.get(path_str)
+            if entry is None:
+                raise KeyError(f"checkpoint missing leaf {path_str}")
+            arr = _from_storable(np.load(os.path.join(d, entry["file"])), entry["dtype"])
+            if tuple(arr.shape) != tuple(spec.shape):
+                raise ValueError(f"{path_str}: shape {arr.shape} != {tuple(spec.shape)}")
+            if sh_flat is not None:
+                leaves.append(jax.device_put(arr, sh_flat[i]))
+            else:
+                leaves.append(jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves)

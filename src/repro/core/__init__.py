@@ -1,0 +1,24 @@
+"""Core: the paper's GPU LSM as a TPU-native, jit-compatible dictionary."""
+
+from repro.core.lsm import (  # noqa: F401
+    LSMConfig,
+    LSMState,
+    lsm_init,
+    lsm_update,
+    lsm_insert,
+    lsm_delete,
+    lsm_update_mixed,
+    lsm_bulk_build,
+    lsm_num_elements,
+    level_runs,
+    level_view,
+)
+from repro.core.queries import (  # noqa: F401
+    lsm_lookup,
+    lsm_count,
+    lsm_range,
+    lookup_runs,
+    count_runs,
+    range_runs,
+)
+from repro.core.cleanup import lsm_cleanup, lsm_valid_count  # noqa: F401

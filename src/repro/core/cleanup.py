@@ -1,0 +1,68 @@
+"""CLEANUP (paper §3.6 / §4.5): purge stale elements and re-slice the levels.
+
+Strategy (all fixed-shape, one jitted program):
+  1. iteratively stable-merge all levels newest-first — merging already-sorted
+     runs is much cheaper than a full resort (paper §4.5);
+  2. mark stale elements: an element survives iff it is the *first* (most
+     recent) element of its equal-key segment, is a regular element (not a
+     tombstone), and is not a placebo;
+  3. compact survivors to the front (prefix-sum scatter);
+  4. the compaction buffer is pre-filled with placebos — this IS the paper's
+     "pad with < b placebo elements" step;
+  5. redistribute the sorted, deduplicated prefix into levels according to the
+     bits of the new resident-batch count (smallest keys → smallest levels).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import semantics as sem
+from repro.core.lsm import LSMConfig, LSMState, _placebo, _redistribute, level_view
+from repro.kernels import ops
+
+
+def merge_all_levels(cfg: LSMConfig, state: LSMState):
+    """Stable newest-first merge of every level into one sorted run."""
+    merged_kv, merged_val = level_view(cfg, state, 0)
+    for i in range(1, cfg.num_levels):
+        lvl_kv, lvl_val = level_view(cfg, state, i)
+        # Everything accumulated so far came from levels 0..i-1, all newer
+        # than level i, so the accumulated run is the `a` (newer) argument.
+        merged_kv, merged_val = ops.merge_sorted(merged_kv, merged_val, lvl_kv, lvl_val)
+    return merged_kv, merged_val
+
+
+def lsm_cleanup(cfg: LSMConfig, state: LSMState) -> LSMState:
+    merged_kv, merged_val = merge_all_levels(cfg, state)
+    orig = sem.original_key(merged_kv)
+
+    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), orig[:-1]])
+    first_of_segment = orig != prev
+    survives = first_of_segment & (~sem.is_tombstone(merged_kv)) & (orig != sem.PLACEBO_KEY)
+
+    total = jnp.sum(survives).astype(jnp.int32)
+    tgt = jnp.cumsum(survives) - 1
+    tgt = jnp.where(survives, tgt, cfg.capacity)  # out-of-range → dropped
+    compact_kv, compact_val = _placebo(cfg.capacity)
+    compact_kv = compact_kv.at[tgt].set(merged_kv, mode="drop")
+    compact_val = compact_val.at[tgt].set(merged_val, mode="drop")
+
+    b = cfg.batch_size
+    r_new = ((total + b - 1) // b).astype(jnp.int32)
+    kvs, vals = _redistribute(cfg, compact_kv, compact_val, r_new)
+    return LSMState(
+        key_vars=kvs,
+        values=vals,
+        r=r_new,
+        overflowed=state.overflowed,
+    )
+
+
+def lsm_valid_count(cfg: LSMConfig, state: LSMState):
+    """Number of live (visible) elements — what cleanup would retain."""
+    merged_kv, _ = merge_all_levels(cfg, state)
+    orig = sem.original_key(merged_kv)
+    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), orig[:-1]])
+    first = orig != prev
+    return jnp.sum(first & (~sem.is_tombstone(merged_kv)) & (orig != sem.PLACEBO_KEY))

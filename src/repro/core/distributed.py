@@ -1,0 +1,217 @@
+"""Range-partitioned distributed LSM over a device mesh (shard_map).
+
+Each device owns a contiguous key range (region-server model, as in
+BigTable/HBase — chosen over hash partitioning because RANGE/COUNT queries
+then touch only the owning shards). Every device runs a full local LSM over
+its range:
+
+  * UPDATE: the global batch is all-gathered; each shard filters the keys it
+    owns and turns the rest into placebo padding — the batch-of-b invariant
+    holds per shard, so the local binary-counter cascade is unchanged. (The
+    all-gather is the TPU-native stand-in for a ragged all-to-all; bytes moved are
+    identical up to the skew factor and the shapes stay static.)
+  * LOOKUP: queries are broadcast; the owner answers; results combine with
+    a max-reduction using ⊥-identities (non-owners contribute 0/false).
+  * COUNT: local counts + psum.
+  * RANGE: local compacted results + per-shard counts; the caller assembles
+    (offsets are an exclusive psum over shard counts).
+  * CLEANUP: purely shard-local (no communication at all) — a nice property
+    of range partitioning the paper's structure inherits for free.
+
+The key space [0, MAX_USER_KEY] is split evenly; shard s owns
+[s * range_size, (s+1) * range_size).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import semantics as sem
+from repro.core.cleanup import lsm_cleanup
+from repro.core.lsm import LSMConfig, LSMState, lsm_init, lsm_update
+from repro.core.queries import count_runs, lookup_runs, range_runs
+from repro.core.lsm import level_runs
+
+
+@dataclasses.dataclass(frozen=True)
+class DistLSMConfig:
+    local: LSMConfig          # per-shard LSM config (batch_size = global batch!)
+    num_shards: int
+    axis: str = "shard"
+
+    @property
+    def range_size(self) -> int:
+        return (sem.PLACEBO_KEY + self.num_shards - 1) // self.num_shards
+
+
+def owner_of(cfg: DistLSMConfig, keys):
+    return jnp.clip(jnp.asarray(keys, jnp.int32) // cfg.range_size, 0, cfg.num_shards - 1)
+
+
+def dist_lsm_init(cfg: DistLSMConfig, mesh) -> LSMState:
+    """Per-shard LSM states, stacked on a leading sharded axis."""
+    def init_one(_):
+        return lsm_init(cfg.local)
+
+    states = jax.vmap(init_one)(jnp.arange(cfg.num_shards))
+    specs = jax.tree_util.tree_map(lambda l: P(cfg.axis, *([None] * (l.ndim - 1))), states)
+    return jax.device_put(states, jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), specs))
+
+
+def _local_state(stacked: LSMState) -> LSMState:
+    """Strip the leading (size-1 per shard) stacking axis inside shard_map."""
+    return jax.tree_util.tree_map(lambda x: x[0], stacked)
+
+
+def _restack(state: LSMState) -> LSMState:
+    return jax.tree_util.tree_map(lambda x: x[None], state)
+
+
+def make_dist_update(cfg: DistLSMConfig, mesh):
+    """Returns jitted update(states, key_vars[b], values[b]) -> states."""
+    state_spec = P(cfg.axis)
+
+    def body(states, key_vars, values):
+        st = _local_state(states)
+        shard = jax.lax.axis_index(cfg.axis).astype(jnp.int32)
+        owner = owner_of(cfg, sem.original_key(key_vars))
+        mine = owner == shard
+        kv = jnp.where(mine, key_vars, sem.PLACEBO_KV)
+        val = jnp.where(mine, values, sem.EMPTY_VALUE)
+        st = lsm_update(cfg.local, st, kv, val)
+        return _restack(st)
+
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(state_spec, P(), P()),
+        out_specs=state_spec,
+        check_vma=False,
+    )
+    return jax.jit(f, donate_argnums=0)
+
+
+def make_dist_lookup(cfg: DistLSMConfig, mesh):
+    """Returns jitted lookup(states, keys[q]) -> (found[q], values[q])."""
+    state_spec = P(cfg.axis)
+
+    def body(states, keys):
+        st = _local_state(states)
+        shard = jax.lax.axis_index(cfg.axis).astype(jnp.int32)
+        mine = owner_of(cfg, keys) == shard
+        found, vals = lookup_runs(level_runs(cfg.local, st), keys)
+        found = found & mine
+        vals = jnp.where(found, vals, 0)
+        # ⊥-identity combine: exactly one shard can report found.
+        found = jax.lax.pmax(found.astype(jnp.int32), cfg.axis) > 0
+        vals = jax.lax.pmax(vals, cfg.axis)
+        return found[None], vals[None]
+
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(state_spec, P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+    def run(states, keys):
+        found, vals = f(states, keys)
+        return found[0], vals[0]
+
+    return jax.jit(run)
+
+
+def make_dist_count(cfg: DistLSMConfig, mesh, max_candidates: int):
+    """Returns jitted count(states, k1[q], k2[q]) -> (counts[q], ok[q]).
+
+    Each shard counts the intersection of [k1, k2] with its own range;
+    global count = psum. Clipping to the shard range keeps per-shard
+    candidate buffers small (max_candidates is per shard).
+    """
+    state_spec = P(cfg.axis)
+
+    def body(states, k1, k2):
+        st = _local_state(states)
+        shard = jax.lax.axis_index(cfg.axis).astype(jnp.int32)
+        lo = shard * cfg.range_size
+        hi = lo + cfg.range_size - 1
+        k1c = jnp.clip(k1, lo, hi + 1)
+        k2c = jnp.clip(k2, lo - 1, hi)
+        nonempty = k1c <= k2c
+        counts, ok = count_runs(level_runs(cfg.local, st), k1c, k2c, max_candidates)
+        counts = jnp.where(nonempty, counts, 0)
+        ok = ok | ~nonempty
+        counts = jax.lax.psum(counts, cfg.axis)
+        ok = jax.lax.pmin(ok.astype(jnp.int32), cfg.axis) > 0
+        return counts[None], ok[None]
+
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(state_spec, P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+    def run(states, k1, k2):
+        c, ok = f(states, k1, k2)
+        return c[0], ok[0]
+
+    return jax.jit(run)
+
+
+def make_dist_range(cfg: DistLSMConfig, mesh, max_candidates: int, max_results: int):
+    """Returns jitted range(states, k1[q], k2[q]) ->
+    (keys [shards, q, max_results], vals, counts [shards, q], ok[q]).
+
+    Results stay shard-major (keys within a shard ascending; shards ascending
+    = globally ascending since partitioning is by range). The caller can
+    compact with the per-shard counts.
+    """
+    state_spec = P(cfg.axis)
+
+    def body(states, k1, k2):
+        st = _local_state(states)
+        shard = jax.lax.axis_index(cfg.axis).astype(jnp.int32)
+        lo = shard * cfg.range_size
+        hi = lo + cfg.range_size - 1
+        k1c = jnp.clip(k1, lo, hi + 1)
+        k2c = jnp.clip(k2, lo - 1, hi)
+        nonempty = (k1c <= k2c)
+        keys, vals, counts, ok = range_runs(
+            level_runs(cfg.local, st), k1c, k2c, max_candidates, max_results
+        )
+        counts = jnp.where(nonempty, counts, 0)
+        ok = ok | ~nonempty
+        ok = jax.lax.pmin(ok.astype(jnp.int32), cfg.axis) > 0
+        return keys[None], vals[None], counts[None], ok[None]
+
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(state_spec, P(), P()),
+        out_specs=(state_spec, state_spec, state_spec, P()),
+        check_vma=False,
+    )
+
+    def run(states, k1, k2):
+        keys, vals, counts, ok = f(states, k1, k2)
+        return keys, vals, counts, ok[0]
+
+    return jax.jit(run)
+
+
+def make_dist_cleanup(cfg: DistLSMConfig, mesh):
+    """Shard-local cleanup — zero communication."""
+    state_spec = P(cfg.axis)
+
+    def body(states):
+        return _restack(lsm_cleanup(cfg.local, _local_state(states)))
+
+    f = shard_map(body, mesh=mesh, in_specs=(state_spec,), out_specs=state_spec,
+                  check_vma=False)
+    return jax.jit(f, donate_argnums=0)

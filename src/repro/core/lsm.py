@@ -1,0 +1,236 @@
+"""TPU LSM: the paper's data structure as a fixed-shape, jit-native JAX module.
+
+Layout (per-level arrays)
+-------------------------
+A GPU allocates levels lazily; a jit/pjit program needs static shapes. We
+preallocate `num_levels` exponentially sized levels as separate arrays —
+level i holds exactly b * 2**i slots. Keeping levels as distinct buffers (not
+one flat arena) matters for the complexity story: a batch update rewrites
+ONLY the levels the binary-counter carry touches (lax.switch pass-through +
+buffer donation forwards untouched levels), preserving the paper's
+O(b log r) amortized insertion cost. A flat arena would force an O(capacity)
+rewrite per batch.
+
+Empty levels (and the tails of cleaned-up levels) hold *placebo* elements —
+maximum original key + tombstone status (paper §4.5 fn. 6) — which sort last
+and are invisible to every query. "Empty" and "full" levels are therefore
+indistinguishable to query code: no control flow depends on occupancy.
+
+The resident-batch counter `r` mirrors the paper exactly: level i is full iff
+bit i of r is set, and a batch update is a binary-counter increment whose
+carries are stable merges.
+
+Everything here is traceable: `LSMConfig` is static (hashable) and `LSMState`
+is a pytree, so `jax.jit(lsm_update, static_argnums=0, donate_argnums=1)`
+works, as does sharding each level with pjit/shard_map (core/distributed.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import semantics as sem
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class LSMConfig:
+    """Static configuration: batch size b and level count L (capacity b*(2^L-1))."""
+
+    batch_size: int
+    num_levels: int
+
+    def __post_init__(self):
+        if self.batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        if self.num_levels < 1:
+            raise ValueError("num_levels must be >= 1")
+
+    @property
+    def capacity(self) -> int:
+        return self.batch_size * ((1 << self.num_levels) - 1)
+
+    @property
+    def max_batches(self) -> int:
+        return (1 << self.num_levels) - 1
+
+    def level_size(self, i: int) -> int:
+        return self.batch_size * (1 << i)
+
+
+class LSMState(NamedTuple):
+    """Pytree state: per-level (key_var, value) arrays + counter + overflow latch."""
+
+    key_vars: Tuple[jax.Array, ...]  # level i: int32[b * 2**i]
+    values: Tuple[jax.Array, ...]
+    r: jax.Array                     # int32[] — number of resident batches
+    overflowed: jax.Array            # bool[] — latches if an update overflowed
+
+
+def level_view(cfg: LSMConfig, state: LSMState, i: int):
+    """Level i as a (sorted, possibly all-placebo) run."""
+    return state.key_vars[i], state.values[i]
+
+
+def level_runs(cfg: LSMConfig, state: LSMState):
+    """All levels as (key_vars, values) runs, newest (level 0) first."""
+    return [level_view(cfg, state, i) for i in range(cfg.num_levels)]
+
+
+def arena_view(state: LSMState):
+    """All levels concatenated (debug/test helper)."""
+    return jnp.concatenate(state.key_vars), jnp.concatenate(state.values)
+
+
+def _placebo(n):
+    return (
+        jnp.full((n,), sem.PLACEBO_KV, dtype=jnp.int32),
+        jnp.full((n,), sem.EMPTY_VALUE, dtype=jnp.int32),
+    )
+
+
+def lsm_init(cfg: LSMConfig) -> LSMState:
+    kvs, vals = zip(*(_placebo(cfg.level_size(i)) for i in range(cfg.num_levels)))
+    return LSMState(
+        key_vars=tuple(kvs),
+        values=tuple(vals),
+        r=jnp.zeros((), dtype=jnp.int32),
+        overflowed=jnp.zeros((), dtype=bool),
+    )
+
+
+def lsm_update(cfg: LSMConfig, state: LSMState, key_vars, values) -> LSMState:
+    """Insert a mixed batch of b encoded updates (inserts and/or tombstones).
+
+    Paper §3.2/§4.1: sort the batch by the full key variable, then cascade
+    stable merges up the level hierarchy until an empty level receives the
+    carry. Merges compare original keys only; newer runs win ties.
+
+    Per level, one of three things happens (lax.switch):
+      0 keep  — level above the carry path: buffer passes through untouched;
+      1 place — first empty level: receives the carry;
+      2 clear — full level consumed by the carry merge: reset to placebos.
+    """
+    b = cfg.batch_size
+    key_vars = jnp.asarray(key_vars, jnp.int32)
+    values = jnp.asarray(values, jnp.int32)
+    if key_vars.shape != (b,) or values.shape != (b,):
+        raise ValueError(f"batch must have shape ({b},), got {key_vars.shape}/{values.shape}")
+
+    would_overflow = state.r >= cfg.max_batches
+
+    carry_kv, carry_val = ops.sort_pairs(key_vars, values)
+    placed = jnp.asarray(False)
+    new_kvs = list(state.key_vars)
+    new_vals = list(state.values)
+
+    for i in range(cfg.num_levels):
+        lvl_kv, lvl_val = new_kvs[i], new_vals[i]
+        n = cfg.level_size(i)
+        full = ((state.r >> i) & 1) == 1
+        do_merge = full & ~placed & ~would_overflow
+        do_place = (~full) & (~placed) & ~would_overflow
+
+        case = do_merge.astype(jnp.int32) * 2 + do_place.astype(jnp.int32)
+        new_kvs[i], new_vals[i] = jax.lax.switch(
+            case,
+            [
+                lambda lk, lv, ck, cv: (lk, lv),            # keep
+                lambda lk, lv, ck, cv: (ck, cv),            # place carry
+                lambda lk, lv, ck, cv, n=n: _placebo(n),    # cleared by merge
+            ],
+            lvl_kv, lvl_val, carry_kv, carry_val,
+        )
+
+        if i + 1 < cfg.num_levels:
+            def _merge(ck, cv, lk, lv):
+                return ops.merge_sorted(ck, cv, lk, lv)
+
+            def _skip(ck, cv, lk, lv, n=n):
+                pk, pv = _placebo(n)
+                return jnp.concatenate([ck, pk]), jnp.concatenate([cv, pv])
+
+            carry_kv, carry_val = jax.lax.cond(
+                do_merge, _merge, _skip, carry_kv, carry_val, lvl_kv, lvl_val
+            )
+        placed = placed | do_place
+
+    return LSMState(
+        key_vars=tuple(new_kvs),
+        values=tuple(new_vals),
+        r=jnp.where(would_overflow, state.r, state.r + 1),
+        overflowed=state.overflowed | would_overflow,
+    )
+
+
+def lsm_insert(cfg: LSMConfig, state: LSMState, keys, values) -> LSMState:
+    """Insert a batch of b (key, value) pairs (original keys, not encoded)."""
+    return lsm_update(cfg, state, sem.encode_insert(keys), values)
+
+
+def lsm_delete(cfg: LSMConfig, state: LSMState, keys) -> LSMState:
+    """Delete a batch of b keys via tombstones (paper §3.3)."""
+    kv = sem.encode_delete(keys)
+    vals = jnp.full((cfg.batch_size,), sem.EMPTY_VALUE, dtype=jnp.int32)
+    return lsm_update(cfg, state, kv, vals)
+
+
+def lsm_update_mixed(cfg: LSMConfig, state: LSMState, keys, values, is_delete) -> LSMState:
+    """Mixed batch: is_delete[i] selects tombstone vs regular insert."""
+    kv = sem.encode(keys, is_delete)
+    vals = jnp.where(jnp.asarray(is_delete), sem.EMPTY_VALUE, jnp.asarray(values, jnp.int32))
+    return lsm_update(cfg, state, kv, vals)
+
+
+def _redistribute(cfg: LSMConfig, compact_kv, compact_val, r_new):
+    """Slice a globally sorted, deduplicated array into LSM levels.
+
+    Level i (if bit i of r_new is set) receives the contiguous slice starting
+    at b * (r_new & (2**i - 1)) — smallest keys land in the smallest levels
+    (paper §4.5). Keys are unique after cleanup, so cross-level recency is
+    irrelevant.
+    """
+    b = cfg.batch_size
+    kvs, vals = [], []
+    for i in range(cfg.num_levels):
+        n = cfg.level_size(i)
+        bit = ((r_new >> i) & 1) == 1
+        src_start = b * (r_new & ((1 << i) - 1))
+        sl_kv = jax.lax.dynamic_slice(compact_kv, (src_start,), (n,))
+        sl_val = jax.lax.dynamic_slice(compact_val, (src_start,), (n,))
+        pk, pv = _placebo(n)
+        kvs.append(jnp.where(bit, sl_kv, pk))
+        vals.append(jnp.where(bit, sl_val, pv))
+    return tuple(kvs), tuple(vals)
+
+
+def lsm_bulk_build(cfg: LSMConfig, keys, values) -> LSMState:
+    """Build from k*b unique keys: one sort + level segmentation (paper §5.2)."""
+    keys = jnp.asarray(keys, jnp.int32)
+    values = jnp.asarray(values, jnp.int32)
+    n = keys.shape[0]
+    if n % cfg.batch_size != 0:
+        raise ValueError("bulk build size must be a multiple of batch_size")
+    k = n // cfg.batch_size
+    if k > cfg.max_batches:
+        raise ValueError("bulk build exceeds configured capacity")
+    kv, vals = ops.sort_pairs(sem.encode_insert(keys), values)
+    pad = cfg.capacity - n
+    kv = jnp.concatenate([kv, _placebo(pad)[0]])
+    vals = jnp.concatenate([vals, _placebo(pad)[1]])
+    kvs, vals = _redistribute(cfg, kv, vals, jnp.asarray(k, jnp.int32))
+    return LSMState(
+        key_vars=kvs,
+        values=vals,
+        r=jnp.asarray(k, jnp.int32),
+        overflowed=jnp.zeros((), dtype=bool),
+    )
+
+
+def lsm_num_elements(cfg: LSMConfig, state: LSMState):
+    """Resident element count (including stale elements), r * b."""
+    return state.r * cfg.batch_size

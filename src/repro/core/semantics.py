@@ -1,0 +1,74 @@
+"""Key-variable encoding for the TPU LSM (paper §4.1).
+
+The paper stores 32-bit "key variables": the 31-bit *original key* shifted left
+once, with the LSB used as a *status bit* (1 = regular element, 0 = tombstone).
+Sorting uses the full key variable, so within one sorted batch a tombstone for
+key k appears *before* any regular element with key k (invariant 2 of §3.4).
+Merging compares original keys only and is stable with the newer array first
+(invariants 1 and 3).
+
+We keep the exact encoding in int32. Because int32 is signed and original keys
+occupy bits [1, 31], encoded key variables of valid original keys are
+non-negative, so signed comparisons order exactly like the paper's unsigned
+ones for the supported key domain [0, 2**30 - 1] plus the placebo key.
+
+Empty slots in the fixed-capacity arena are *placebo* elements (paper §4.5,
+footnote 6): maximum original key + tombstone status. They sort to the end of
+every level and are invisible to all queries.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Original keys live in [0, MAX_KEY]. MAX_KEY itself is reserved for placebos.
+# We use 2**30 - 1 as the largest user key so that (key << 1) stays positive
+# in int32 even with the status bit set.
+PLACEBO_KEY = (1 << 30) - 1          # reserved original key for padding
+MAX_USER_KEY = PLACEBO_KEY - 1       # largest insertable original key
+
+STATUS_REGULAR = 1
+STATUS_TOMBSTONE = 0
+
+# Encoded placebo key-variable: placebo original key, tombstone status.
+PLACEBO_KV = (PLACEBO_KEY << 1) | STATUS_TOMBSTONE
+
+# Sentinel "value" stored alongside placebos / tombstones.
+EMPTY_VALUE = 0
+
+
+def encode(keys, is_tombstone):
+    """Pack original keys + status bits into key variables.
+
+    is_tombstone: bool array — True marks a deletion (tombstone).
+    """
+    keys = jnp.asarray(keys, dtype=jnp.int32)
+    status = jnp.where(jnp.asarray(is_tombstone), STATUS_TOMBSTONE, STATUS_REGULAR)
+    return (keys << 1) | status.astype(jnp.int32)
+
+
+def encode_insert(keys):
+    keys = jnp.asarray(keys, dtype=jnp.int32)
+    return (keys << 1) | STATUS_REGULAR
+
+
+def encode_delete(keys):
+    keys = jnp.asarray(keys, dtype=jnp.int32)
+    return (keys << 1) | STATUS_TOMBSTONE
+
+
+def original_key(key_vars):
+    """Strip the status bit (logical shift — key vars are non-negative)."""
+    return jnp.asarray(key_vars, dtype=jnp.int32) >> 1
+
+
+def status_bit(key_vars):
+    return jnp.asarray(key_vars, dtype=jnp.int32) & 1
+
+
+def is_tombstone(key_vars):
+    return status_bit(key_vars) == STATUS_TOMBSTONE
+
+
+def is_placebo(key_vars):
+    return original_key(key_vars) == PLACEBO_KEY

@@ -1,0 +1,100 @@
+"""Sorted-array (SA) baseline (paper §5.1): one big sorted run.
+
+Updates merge the (sorted) incoming batch into the whole array — O(n) work per
+batch versus the LSM's O(b log r) — which is exactly the gap Table 2 / Fig. 2b
+of the paper quantify. Queries reuse the shared run-based pipelines with a
+single run, so query semantics (tombstones, recency) are identical.
+
+Fixed-shape adaptation: a static-capacity arena padded with placebos. The
+rank-based merge writes each merged position < capacity exactly once; placebo
+overflow past the end is dropped. The caller must keep
+live-elements + batch <= capacity (checked by `sa_would_overflow`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import semantics as sem
+from repro.core import queries
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class SAConfig:
+    capacity: int
+
+
+class SAState(NamedTuple):
+    key_vars: jnp.ndarray  # int32[capacity]
+    values: jnp.ndarray    # int32[capacity]
+    n: jnp.ndarray         # int32[] — resident elements (incl. stale, excl. placebo)
+
+
+def sa_init(cfg: SAConfig) -> SAState:
+    kv = jnp.full((cfg.capacity,), sem.PLACEBO_KV, dtype=jnp.int32)
+    val = jnp.full((cfg.capacity,), sem.EMPTY_VALUE, dtype=jnp.int32)
+    return SAState(kv, val, jnp.zeros((), jnp.int32))
+
+
+def sa_bulk_build(cfg: SAConfig, keys, values) -> SAState:
+    keys = jnp.asarray(keys, jnp.int32)
+    values = jnp.asarray(values, jnp.int32)
+    n = keys.shape[0]
+    if n > cfg.capacity:
+        raise ValueError("bulk build exceeds capacity")
+    kv, vals = ops.sort_pairs(sem.encode_insert(keys), values)
+    pad = cfg.capacity - n
+    kv = jnp.concatenate([kv, jnp.full((pad,), sem.PLACEBO_KV, jnp.int32)])
+    vals = jnp.concatenate([vals, jnp.full((pad,), sem.EMPTY_VALUE, jnp.int32)])
+    return SAState(kv, vals, jnp.asarray(n, jnp.int32))
+
+
+def sa_update_batch(cfg: SAConfig, state: SAState, key_vars, values) -> SAState:
+    """Merge a batch of encoded updates into the array (sort + full merge)."""
+    bkv, bval = ops.sort_pairs(jnp.asarray(key_vars, jnp.int32), jnp.asarray(values, jnp.int32))
+    b = bkv.shape[0]
+    a_keys = sem.original_key(bkv)          # batch = newer run
+    c_keys = sem.original_key(state.key_vars)
+    idx_a = jnp.arange(b, dtype=jnp.int32) + jnp.searchsorted(c_keys, a_keys, side="left").astype(jnp.int32)
+    idx_c = jnp.arange(cfg.capacity, dtype=jnp.int32) + jnp.searchsorted(a_keys, c_keys, side="right").astype(jnp.int32)
+    out_kv = jnp.full((cfg.capacity,), sem.PLACEBO_KV, dtype=jnp.int32)
+    out_val = jnp.full((cfg.capacity,), sem.EMPTY_VALUE, dtype=jnp.int32)
+    # Positions >= capacity are placebo overflow — dropped. Live elements can
+    # only be dropped if the caller violated the capacity precondition.
+    out_kv = out_kv.at[idx_a].set(bkv, mode="drop").at[idx_c].set(state.key_vars, mode="drop")
+    out_val = out_val.at[idx_a].set(bval, mode="drop").at[idx_c].set(state.values, mode="drop")
+    return SAState(out_kv, out_val, state.n + b)
+
+
+def sa_insert(cfg: SAConfig, state: SAState, keys, values) -> SAState:
+    return sa_update_batch(cfg, state, sem.encode_insert(keys), values)
+
+
+def sa_delete(cfg: SAConfig, state: SAState, keys) -> SAState:
+    kv = sem.encode_delete(keys)
+    vals = jnp.full((kv.shape[0],), sem.EMPTY_VALUE, dtype=jnp.int32)
+    return sa_update_batch(cfg, state, kv, vals)
+
+
+def sa_would_overflow(cfg: SAConfig, state: SAState, batch: int):
+    return state.n + batch > cfg.capacity
+
+
+def _runs(state: SAState):
+    return [(state.key_vars, state.values)]
+
+
+def sa_lookup(cfg: SAConfig, state: SAState, query_keys):
+    return queries.lookup_runs(_runs(state), query_keys)
+
+
+def sa_count(cfg: SAConfig, state: SAState, k1, k2, max_candidates: int):
+    return queries.count_runs(_runs(state), k1, k2, max_candidates)
+
+
+def sa_range(cfg: SAConfig, state: SAState, k1, k2, max_candidates: int, max_results: int):
+    return queries.range_runs(_runs(state), k1, k2, max_candidates, max_results)

@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for the LSM hot-spots (+ pure-jnp oracles in ref.py)."""

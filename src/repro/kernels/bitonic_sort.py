@@ -1,0 +1,111 @@
+"""Bitonic sort Pallas kernel — the batch-sort hot-spot of LSM updates.
+
+The paper uses CUB radix sort. Radix sort is scatter-heavy (per-pass bucket
+scatters), which is hostile to the TPU's vector memory; the TPU-idiomatic
+equivalent of "fast device sort of a VMEM-resident tile" is a bitonic
+compare-exchange network: every stage is a branch-free reshape + min/max over
+lanes — zero gathers, zero scatters, perfect for the 8x128 VPU.
+
+The kernel sorts CHUNK-sized tiles entirely inside VMEM (grid over tiles).
+Arbitrarily large batches are handled in ops.py by a hierarchical sort:
+bitonic-sorted chunks are combined with the Merge-Path kernel in compare-full
+mode — exactly the LSM trick, reused one level down.
+
+Sorting compares the FULL 32-bit key variable (status bit included), so a
+tombstone lands before the regular elements of its key within a batch, which
+is what makes same-batch insert-then-delete resolve to "deleted" (§4.1).
+Not stable among *identical* key variables (semantically immaterial: equal
+key variable => same key and same status; which duplicate survives a lookup
+is unspecified by semantics item 4).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 1 << 10          # elements sorted in one VMEM tile
+MIN_N = 8
+_INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _compare_exchange(kv, val, j, k, n):
+    """One bitonic stage: partner distance j within ascending-by-bit-k runs."""
+    m = n // (2 * j)
+    kv3 = kv.reshape(m, 2, j)
+    val3 = val.reshape(m, 2, j)
+    a_kv, b_kv = kv3[:, 0, :], kv3[:, 1, :]
+    a_val, b_val = val3[:, 0, :], val3[:, 1, :]
+    # Direction bit: ascending iff (flat_index & k) == 0; constant across the
+    # pair (j < k), so evaluate it at the `a` element.
+    flat_a = (
+        jnp.arange(m, dtype=jnp.int32)[:, None] * (2 * j)
+        + jnp.arange(j, dtype=jnp.int32)[None, :]
+    )
+    asc = (flat_a & k) == 0
+    swap = (a_kv > b_kv) == asc  # out of order w.r.t. direction
+    new_a_kv = jnp.where(swap, b_kv, a_kv)
+    new_b_kv = jnp.where(swap, a_kv, b_kv)
+    new_a_val = jnp.where(swap, b_val, a_val)
+    new_b_val = jnp.where(swap, a_val, b_val)
+    kv3 = jnp.stack([new_a_kv, new_b_kv], axis=1)
+    val3 = jnp.stack([new_a_val, new_b_val], axis=1)
+    return kv3.reshape(n), val3.reshape(n)
+
+
+def _bitonic_kernel(x_ref, o_ref, *, n):
+    kv = x_ref[0, :]
+    val = x_ref[1, :]
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            kv, val = _compare_exchange(kv, val, j, k, n)
+            j //= 2
+        k *= 2
+    o_ref[0, :] = kv
+    o_ref[1, :] = val
+
+
+def bitonic_sort_pairs(key_vars, values, *, interpret=False):
+    """Sort (key_var, value) pairs by full key variable.
+
+    n must be a power of two. n <= CHUNK sorts in a single VMEM tile;
+    larger powers of two sort CHUNK tiles in parallel grid steps and are
+    merged by the caller (ops.sort_pairs_hierarchical).
+    """
+    n = key_vars.shape[0]
+    assert n & (n - 1) == 0 and n >= MIN_N, n
+    tile = min(n, CHUNK)
+    n_tiles = n // tile
+    stacked = jnp.stack([key_vars.astype(jnp.int32), values.astype(jnp.int32)])
+    out = pl.pallas_call(
+        functools.partial(_bitonic_kernel, n=tile),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((2, tile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((2, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((2, n), jnp.int32),
+        interpret=interpret,
+    )(stacked)
+    kv, val = out[0], out[1]
+    if n_tiles > 1:
+        from repro.kernels import merge_path
+
+        # Hierarchical combine: pairwise compare-full Merge-Path rounds.
+        runs = [(kv[i * tile : (i + 1) * tile], val[i * tile : (i + 1) * tile]) for i in range(n_tiles)]
+        while len(runs) > 1:
+            nxt = []
+            for i in range(0, len(runs), 2):
+                a, b = runs[i], runs[i + 1]
+                nxt.append(
+                    merge_path.merge_path(
+                        a[0], a[1], b[0], b[1], compare_full=True, interpret=interpret
+                    )
+                )
+            runs = nxt
+        kv, val = runs[0]
+    return kv, val

@@ -1,0 +1,65 @@
+"""Streamed lower-bound Pallas kernel — the LSM query hot-spot.
+
+The paper's lookup bottleneck is random memory access during per-thread binary
+search (§4.2). A literal port would issue data-dependent HBM gathers — the
+single worst access pattern on TPU. The TPU-native reformulation:
+
+    lower_bound(level, q) == #elements of `level` with key < q
+                          == sum over chunks of per-chunk counts.
+
+So instead of one pointer-chasing search per query, we *stream* the level
+through VMEM in LEVEL_CHUNK tiles (perfectly coalesced, bandwidth-bound) and
+accumulate per-chunk counts for a whole block of queries at once. The
+per-chunk count is an all-pairs comparison matrix — [QUERY_BLOCK x
+LEVEL_CHUNK] int ops per LEVEL_CHUNK loads, which the VPU retires faster than
+HBM can feed the keys, i.e. the kernel stays memory-bound (the roofline
+optimum for a search over data that is read once).
+
+Grid = (query tiles, level chunks); the output tile is revisited across the
+chunk axis (standard Pallas accumulator pattern, initialized at chunk 0).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QUERY_BLOCK = 256
+LEVEL_CHUNK = 2048
+
+
+def _lower_bound_kernel(q_ref, chunk_ref, o_ref):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...]          # [QUERY_BLOCK]
+    keys = chunk_ref[...]   # [LEVEL_CHUNK]
+    cnt = jnp.sum((keys[None, :] < q[:, None]).astype(jnp.int32), axis=1)
+    o_ref[...] += cnt
+
+
+def lower_bound_streamed(sorted_keys, query_keys, *, interpret=False):
+    """Vectorized lower_bound over a sorted array (original keys).
+
+    sorted_keys: int32[n], n % LEVEL_CHUNK == 0 (placebo-padded by the LSM).
+    query_keys:  int32[q], q % QUERY_BLOCK == 0.
+    """
+    n = sorted_keys.shape[0]
+    q = query_keys.shape[0]
+    assert n % LEVEL_CHUNK == 0 and q % QUERY_BLOCK == 0, (n, q)
+    grid = (q // QUERY_BLOCK, n // LEVEL_CHUNK)
+    return pl.pallas_call(
+        _lower_bound_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((QUERY_BLOCK,), lambda i, c: (i,)),
+            pl.BlockSpec((LEVEL_CHUNK,), lambda i, c: (c,)),
+        ],
+        out_specs=pl.BlockSpec((QUERY_BLOCK,), lambda i, c: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.int32),
+        interpret=interpret,
+    )(query_keys.astype(jnp.int32), sorted_keys.astype(jnp.int32))

@@ -1,0 +1,164 @@
+"""Merge Path Pallas kernel — the LSM's cascade-merge hot-spot on TPU.
+
+The paper uses moderngpu's Merge Path merge (diagonal partition + per-CTA
+shared-memory merges). The TPU adaptation:
+
+  * The diagonal partition (one binary search per output tile boundary) is a
+    tiny vectorized XLA computation (`merge_partition`) — T+1 searches of
+    O(log n) each. Its result is handed to the kernel as a *scalar prefetch*
+    operand, the TPU analogue of reading partition points from global memory
+    before the CTA starts.
+  * Each grid step merges one BLOCK-sized output tile. Its A/B windows are
+    data-dependent, so the BlockSpec index maps are driven by the prefetched
+    partition: each side fetches the two consecutive BLOCK-blocks that cover
+    its (unaligned, <= BLOCK long) window — HBM→VMEM copies stay block-aligned
+    and coalesced, and the unaligned window is carved out in-register.
+  * The in-tile merge is rank-based and branch-free: an all-pairs comparison
+    matrix (VPU-friendly, [BLOCK x BLOCK] int ops against ~BLOCK loads — the
+    kernel stays bandwidth-bound for BLOCK <= 1024) yields each element's
+    local rank; a local scatter materializes the tile. No serial merge loop,
+    no divergence — this replaces the warp-wide serial merges of the CUDA
+    version, which have no SIMD-lockstep analogue on the VPU.
+
+Semantics match `ref.merge_ref`: compare original keys (status bit ignored),
+stable, ties taken from `a` (the newer run) first. With `compare_full=True`
+the comparison uses the full key variable instead — used by the hierarchical
+large-batch sort in ops.py (sorted chunks + merge cascade).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK = 256
+_INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def merge_partition(a_keys, b_keys, diags):
+    """Merge-Path split: #elements taken from `a` among the first d outputs.
+
+    Ties go to `a` (take from `a` while a_key <= b_key). Vectorized binary
+    search over all diagonals at once.
+    """
+    na, nb = a_keys.shape[0], b_keys.shape[0]
+    diags = jnp.asarray(diags, jnp.int32)
+    lo = jnp.maximum(0, diags - nb)
+    hi = jnp.minimum(diags, na)
+    steps = max(1, int(math.ceil(math.log2(max(na + nb, 2)))) + 1)
+    for _ in range(steps):
+        active = lo < hi
+        mid = (lo + hi) // 2
+        a_v = a_keys[jnp.clip(mid, 0, na - 1)]
+        b_v = b_keys[jnp.clip(diags - 1 - mid, 0, nb - 1)]
+        pred = a_v <= b_v  # can take one more from a
+        lo = jnp.where(active & pred, mid + 1, lo)
+        hi = jnp.where(active & ~pred, mid, hi)
+    return lo
+
+
+def _window(buf2, start, block0, length, fill):
+    """Carve an unaligned window [start, start+BLOCK) out of two fetched blocks.
+
+    buf2: [2, 2*BLOCK] (kv row 0, val row 1) — two adjacent BLOCK-blocks.
+    Lanes >= length are masked to `fill` (kv) / 0 (val).
+    """
+    shift = start - block0 * BLOCK
+    lane = jnp.arange(BLOCK, dtype=jnp.int32)
+    idx = jnp.clip(shift + lane, 0, 2 * BLOCK - 1)
+    kv = jnp.take(buf2[0], idx)
+    val = jnp.take(buf2[1], idx)
+    valid = lane < length
+    return jnp.where(valid, kv, fill), jnp.where(valid, val, 0), valid
+
+
+def _merge_kernel(bounds_ref, a0_ref, a1_ref, b0_ref, b1_ref, o_ref, *, na, nb, shift):
+    t = pl.program_id(0)
+    d0 = t * BLOCK
+    a_start = bounds_ref[t]
+    a_end = bounds_ref[t + 1]
+    b_start = d0 - a_start
+    b_end = d0 + BLOCK - a_end
+    la = a_end - a_start
+    lb = b_end - b_start
+
+    blk_a = jnp.minimum(a_start // BLOCK, na // BLOCK - 1)
+    blk_b = jnp.minimum(b_start // BLOCK, nb // BLOCK - 1)
+    abuf = jnp.concatenate([a0_ref[...], a1_ref[...]], axis=1)
+    bbuf = jnp.concatenate([b0_ref[...], b1_ref[...]], axis=1)
+    a_kv, a_val, _ = _window(abuf, a_start, blk_a, la, _INT32_MAX)
+    b_kv, b_val, _ = _window(bbuf, b_start, blk_b, lb, _INT32_MAX)
+
+    # Comparison keys: original key (>> 1) or full key variable. Invalid lanes
+    # already hold INT32_MAX, whose shifted form still dominates every valid key.
+    a_cmp = a_kv >> shift if shift else a_kv
+    b_cmp = b_kv >> shift if shift else b_kv
+    lane = jnp.arange(BLOCK, dtype=jnp.int32)
+    a_cmp = jnp.where(lane < la, a_cmp, _INT32_MAX)
+    b_cmp = jnp.where(lane < lb, b_cmp, _INT32_MAX)
+
+    # All-pairs ranks: a[i] precedes b[j] iff a_cmp[i] <= b_cmp[j].
+    rank_a = lane + jnp.sum((b_cmp[None, :] < a_cmp[:, None]).astype(jnp.int32), axis=1)
+    rank_b = lane + jnp.sum((a_cmp[None, :] <= b_cmp[:, None]).astype(jnp.int32), axis=1)
+
+    out_kv = jnp.zeros((BLOCK,), jnp.int32)
+    out_val = jnp.zeros((BLOCK,), jnp.int32)
+    out_kv = out_kv.at[rank_a].set(a_kv, mode="drop").at[rank_b].set(b_kv, mode="drop")
+    out_val = out_val.at[rank_a].set(a_val, mode="drop").at[rank_b].set(b_val, mode="drop")
+    o_ref[0, :] = out_kv
+    o_ref[1, :] = out_val
+
+
+def merge_path(a_kv, a_val, b_kv, b_val, *, compare_full=False, interpret=False):
+    """Merge two sorted runs (a = newer). Shapes must be multiples of BLOCK."""
+    na, nb = a_kv.shape[0], b_kv.shape[0]
+    n = na + nb
+    assert na % BLOCK == 0 and nb % BLOCK == 0, (na, nb)
+    shift = 0 if compare_full else 1
+    a_keys = (a_kv >> shift) if shift else a_kv
+    b_keys = (b_kv >> shift) if shift else b_kv
+    n_tiles = n // BLOCK
+    diags = jnp.arange(n_tiles + 1, dtype=jnp.int32) * BLOCK
+    bounds = merge_partition(a_keys, b_keys, diags).astype(jnp.int32)
+
+    a_stack = jnp.stack([a_kv, a_val])  # [2, na]
+    b_stack = jnp.stack([b_kv, b_val])
+
+    na_blocks = na // BLOCK
+    nb_blocks = nb // BLOCK
+
+    def a_idx0(t, bounds):
+        return (0, jnp.minimum(bounds[t] // BLOCK, na_blocks - 1))
+
+    def a_idx1(t, bounds):
+        return (0, jnp.minimum(bounds[t] // BLOCK + 1, na_blocks - 1))
+
+    def b_idx0(t, bounds):
+        return (0, jnp.minimum((t * BLOCK - bounds[t]) // BLOCK, nb_blocks - 1))
+
+    def b_idx1(t, bounds):
+        return (0, jnp.minimum((t * BLOCK - bounds[t]) // BLOCK + 1, nb_blocks - 1))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((2, BLOCK), a_idx0),
+            pl.BlockSpec((2, BLOCK), a_idx1),
+            pl.BlockSpec((2, BLOCK), b_idx0),
+            pl.BlockSpec((2, BLOCK), b_idx1),
+        ],
+        out_specs=pl.BlockSpec((2, BLOCK), lambda t, bounds: (0, t)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_merge_kernel, na=na, nb=nb, shift=shift),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((2, n), jnp.int32),
+        interpret=interpret,
+    )(bounds, a_stack, a_stack, b_stack, b_stack)
+    return out[0], out[1]

@@ -1,0 +1,101 @@
+"""jit'd dispatch wrappers for the LSM compute hot-spots.
+
+Backends:
+  "xla"    — the pure-jnp reference implementations (kernels/ref.py). This is
+             the default off-TPU: rank-based merge and `lax.sort` are already
+             near-roofline XLA programs on CPU, and identical semantics.
+  "pallas" — the Pallas TPU kernels (merge_path / bitonic_sort / lsm_lookup)
+             with explicit BlockSpec VMEM tiling. On non-TPU platforms the
+             kernels execute in interpret mode (used by the test suite to
+             validate the kernel bodies against the oracles).
+
+Selection: `set_backend(...)` or the REPRO_KERNEL_BACKEND env var.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "xla")
+# Pallas kernels run in interpret mode automatically off-TPU.
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    if name not in ("xla", "pallas"):
+        raise ValueError(f"unknown kernel backend {name!r}")
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def _pallas_viable_merge(na: int, nb: int) -> bool:
+    from repro.kernels import merge_path
+
+    return (
+        na % merge_path.BLOCK == 0
+        and nb % merge_path.BLOCK == 0
+        and na >= merge_path.BLOCK
+        and nb >= merge_path.BLOCK
+    )
+
+
+def merge_sorted(a_kv, a_val, b_kv, b_val):
+    """Stable original-key merge; `a` is the newer run (ties: a first)."""
+    if _BACKEND == "pallas" and _pallas_viable_merge(a_kv.shape[0], b_kv.shape[0]):
+        from repro.kernels import merge_path
+
+        return merge_path.merge_path(a_kv, a_val, b_kv, b_val, interpret=_INTERPRET)
+    return ref.merge_ref(a_kv, a_val, b_kv, b_val)
+
+
+def sort_pairs(key_vars, values):
+    """Sort (key_var, value) pairs by full key variable, stable."""
+    if _BACKEND == "pallas":
+        from repro.kernels import bitonic_sort
+
+        n = key_vars.shape[0]
+        if n >= bitonic_sort.MIN_N and (n & (n - 1)) == 0:
+            return bitonic_sort.bitonic_sort_pairs(key_vars, values, interpret=_INTERPRET)
+    return ref.sort_ref(key_vars, values)
+
+
+def lower_bound(sorted_orig_keys, query_keys):
+    """Vectorized lower-bound (first index with key >= query)."""
+    if _BACKEND == "pallas":
+        from repro.kernels import lsm_lookup
+
+        n, q = sorted_orig_keys.shape[0], query_keys.shape[0]
+        if n % lsm_lookup.LEVEL_CHUNK == 0 and q % lsm_lookup.QUERY_BLOCK == 0:
+            return lsm_lookup.lower_bound_streamed(
+                sorted_orig_keys, query_keys, interpret=_INTERPRET
+            )
+    return ref.lower_bound_ref(sorted_orig_keys, query_keys)
+
+
+def upper_bound(sorted_orig_keys, query_keys):
+    return ref.upper_bound_ref(sorted_orig_keys, query_keys)
+
+
+def lookup_level(level_kv, level_val, query_keys):
+    """One-level lookup probe built on lower_bound (kernel-accelerated)."""
+    from repro.core import semantics as sem
+
+    orig = sem.original_key(level_kv)
+    idx = lower_bound(orig, query_keys)
+    idx_c = jnp.clip(idx, 0, level_kv.shape[0] - 1)
+    found_kv = level_kv[idx_c]
+    found_val = level_val[idx_c]
+    in_range = idx < level_kv.shape[0]
+    hit = in_range & (sem.original_key(found_kv) == query_keys)
+    is_tomb = sem.is_tombstone(found_kv)
+    return hit, is_tomb, found_val

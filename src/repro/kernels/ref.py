@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the LSM kernels.
+
+These are the semantic ground truth for the Pallas kernels (merge_path,
+bitonic_sort, lsm_lookup) and also serve as the XLA fallback path used on
+platforms without Pallas support (e.g. this CPU container outside of
+interpret-mode tests). Everything here is O(n log n) rank-based and fully
+parallel, so the fallback is itself production-quality XLA.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import semantics as sem
+
+
+def merge_ref(a_kv, a_val, b_kv, b_val):
+    """Stable merge of two sorted runs, comparing ORIGINAL keys only.
+
+    `a` is the NEWER run: for equal original keys, all of `a`'s elements
+    precede all of `b`'s in the output (paper §4.1 — "new levels merged into
+    existing levels appear first in the merged result"). Within each run the
+    input order is preserved.
+
+    Rank-based formulation: element a[i] lands at i + |{j : b_key[j] < a_key[i]}|,
+    element b[j] lands at j + |{i : a_key[i] <= b_key[j]}|. Both scatters are
+    disjoint and cover [0, |a|+|b|).
+    """
+    a_keys = sem.original_key(a_kv)
+    b_keys = sem.original_key(b_kv)
+    na, nb = a_keys.shape[0], b_keys.shape[0]
+    idx_a = jnp.arange(na, dtype=jnp.int32) + jnp.searchsorted(b_keys, a_keys, side="left").astype(jnp.int32)
+    idx_b = jnp.arange(nb, dtype=jnp.int32) + jnp.searchsorted(a_keys, b_keys, side="right").astype(jnp.int32)
+    out_kv = jnp.zeros(na + nb, dtype=a_kv.dtype)
+    out_val = jnp.zeros(na + nb, dtype=a_val.dtype)
+    out_kv = out_kv.at[idx_a].set(a_kv).at[idx_b].set(b_kv)
+    out_val = out_val.at[idx_a].set(a_val).at[idx_b].set(b_val)
+    return out_kv, out_val
+
+
+def sort_ref(key_vars, values):
+    """Sort a batch by FULL key variable (status bit included), stable.
+
+    Sorting by the full key variable puts a tombstone for key k before any
+    regular element with key k from the same batch (paper §4.1), which makes
+    same-batch insert-then-delete resolve to "deleted" (semantics item 6).
+    """
+    return jax.lax.sort((key_vars, values), dimension=0, is_stable=True, num_keys=1)
+
+
+def lower_bound_ref(sorted_orig_keys, query_keys):
+    """Index of the first element >= query (std::lower_bound)."""
+    return jnp.searchsorted(sorted_orig_keys, query_keys, side="left").astype(jnp.int32)
+
+
+def upper_bound_ref(sorted_orig_keys, query_keys):
+    return jnp.searchsorted(sorted_orig_keys, query_keys, side="right").astype(jnp.int32)
+
+
+def lookup_level_ref(level_kv, level_val, query_keys):
+    """One level of the LSM lookup: lower-bound search + match/status check.
+
+    Returns (hit, is_tomb, value): hit marks queries whose lower-bound element
+    has a matching original key; is_tomb marks hits that are tombstones
+    (resolve to "deleted"); value is the payload for regular hits.
+    """
+    orig = sem.original_key(level_kv)
+    idx = jnp.searchsorted(orig, query_keys, side="left").astype(jnp.int32)
+    idx_c = jnp.clip(idx, 0, level_kv.shape[0] - 1)
+    found_kv = level_kv[idx_c]
+    found_val = level_val[idx_c]
+    in_range = idx < level_kv.shape[0]
+    hit = in_range & (sem.original_key(found_kv) == query_keys)
+    is_tomb = sem.is_tombstone(found_kv)
+    return hit, is_tomb, found_val

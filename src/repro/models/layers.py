@@ -1,0 +1,317 @@
+"""Shared model layers: norms, RoPE, attention (GQA, blocked, cached), MLP, MoE.
+
+Conventions:
+  * params are nested dicts of jnp arrays; every layer is `init(key, ...)` +
+    a pure apply function.
+  * compute dtype is bf16; reductions that need it (softmax, norms, router)
+    run in fp32.
+  * attention KV caches are dicts {"k": [B, S_max, KV, hd], "v": ..., "len": []}.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DTYPE = jnp.bfloat16
+# Trace-time switch (set via set_attn_seq_shard / PerfOptions.attn_seq_shard):
+# shard attention activations by SEQUENCE over the model axis. For GQA archs
+# whose head counts do not divide the TP axis (e.g. 28 q / 4 kv heads on a
+# 16-way axis) the partitioner otherwise pads or replicates heads and emits
+# large reshard collectives; sequence is always divisible.
+_ATTN_SEQ_SHARD = False
+
+
+def set_attn_seq_shard(enabled: bool) -> None:
+    global _ATTN_SEQ_SHARD
+    _ATTN_SEQ_SHARD = bool(enabled)
+NEG_INF = -1e30
+# Sequence length above which causal attention switches to the Q-blocked
+# streaming form (bounds the scores buffer to Q_BLOCK rows).
+BLOCKED_ATTN_THRESHOLD = 8192
+Q_BLOCK = 1024
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in, d_out, bias=False, scale=0.02):
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(DTYPE)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), DTYPE)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rms_norm_init(d):
+    return {"scale": jnp.ones((d,), DTYPE)}
+
+
+def rms_norm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """Rotary embedding. x: [..., S, H, hd]; positions: [S] or [B, S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def _act(name, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# MLP (GLU for silu, plain for gelu)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model, d_ff, act="silu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "silu":  # SwiGLU
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff),
+            "w_up": dense_init(k2, d_model, d_ff),
+            "w_down": dense_init(k3, d_ff, d_model),
+            "act": None,
+        }
+    return {
+        "w_up": dense_init(k2, d_model, d_ff),
+        "w_down": dense_init(k3, d_ff, d_model),
+        "act": None,
+    }
+
+
+def mlp(p, x, act="silu"):
+    if "w_gate" in p:
+        h = _act("silu", dense(p["w_gate"], x)) * dense(p["w_up"], x)
+    else:
+        h = _act(act, dense(p["w_up"], x))
+    return dense(p["w_down"], h)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, d_model, num_heads, num_kv_heads, head_dim, qkv_bias=False):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d_model, num_heads * head_dim, bias=qkv_bias),
+        "wk": dense_init(kk, d_model, num_kv_heads * head_dim, bias=qkv_bias),
+        "wv": dense_init(kv, d_model, num_kv_heads * head_dim, bias=qkv_bias),
+        "wo": dense_init(ko, num_heads * head_dim, d_model),
+    }
+
+
+def _sdpa(q, k, v, mask):
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,KV,hd]; mask: broadcastable [B,1,Sq,Sk]."""
+    b, sq, h, hd = q.shape
+    kv_heads = k.shape[2]
+    groups = h // kv_heads
+    qg = q.reshape(b, sq, kv_heads, groups, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _causal_mask(sq, sk, q_offset=0, window=0):
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(sk)[None, :]
+    m = ki <= qi
+    if window:
+        m = m & (ki > qi - window)
+    return m[None, None]  # [1,1,Sq,Sk]
+
+
+def attention(p, x, positions, *, num_heads, num_kv_heads, head_dim, theta,
+              causal=True, window=0):
+    """Full (or Q-blocked) self-attention for train/prefill."""
+    b, s, _ = x.shape
+    q = dense(p["wq"], x).reshape(b, s, num_heads, head_dim)
+    k = dense(p["wk"], x).reshape(b, s, num_kv_heads, head_dim)
+    v = dense(p["wv"], x).reshape(b, s, num_kv_heads, head_dim)
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+    if _ATTN_SEQ_SHARD:
+        from repro.dist.sharding import hint
+
+        # Q rows sequence-sharded over the TP axis; K/V replicated across it
+        # (cheap: kv_heads is small for GQA). Each shard computes its own
+        # causal score rows — flash-style row partitioning, no head padding.
+        q = hint(q, ("pod", "data"), "model", None, None)
+        k = hint(k, ("pod", "data"), None, None, None)
+        v = hint(v, ("pod", "data"), None, None, None)
+
+    if causal and s > BLOCKED_ATTN_THRESHOLD and s % Q_BLOCK == 0:
+        # Q-blocked streaming attention: bounds the score buffer to
+        # [B, H, Q_BLOCK, S] regardless of sequence length.
+        nq = s // Q_BLOCK
+
+        def body(carry, qi):
+            q_blk = jax.lax.dynamic_slice_in_dim(q, qi * Q_BLOCK, Q_BLOCK, axis=1)
+            mask = _causal_mask(Q_BLOCK, s, q_offset=qi * Q_BLOCK, window=window)
+            o_blk = _sdpa(q_blk, k, v, mask)
+            return carry, o_blk
+
+        _, blocks = jax.lax.scan(body, None, jnp.arange(nq))
+        out = jnp.moveaxis(blocks, 0, 1).reshape(b, s, num_heads, head_dim)
+    else:
+        mask = _causal_mask(s, s, window=window) if causal else jnp.ones((1, 1, s, s), bool)
+        out = _sdpa(q, k, v, mask)
+    return dense(p["wo"], out.reshape(b, s, num_heads * head_dim))
+
+
+def attention_prefill(p, x, positions, *, num_heads, num_kv_heads, head_dim, theta,
+                      window=0, cache_pad_to=0):
+    """Prefill: same as attention() but also returns the populated KV cache.
+
+    cache_pad_to > s reserves room in the cache for subsequent decode appends.
+    """
+    b, s, _ = x.shape
+    k = rope(dense(p["wk"], x).reshape(b, s, num_kv_heads, head_dim), positions, theta)
+    v = dense(p["wv"], x).reshape(b, s, num_kv_heads, head_dim)
+    y = attention(p, x, positions, num_heads=num_heads, num_kv_heads=num_kv_heads,
+                  head_dim=head_dim, theta=theta, causal=True, window=window)
+    if cache_pad_to and cache_pad_to > s:
+        pad = cache_pad_to - s
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return y, {"k": k, "v": v}
+
+
+def attention_decode(p, x, cache, cache_len, *, num_heads, num_kv_heads, head_dim,
+                     theta, window=0):
+    """One-token decode against a KV cache.
+
+    x: [B, 1, D]; cache: {"k","v"}: [B, S_max, KV, hd]; cache_len: [] int32 —
+    number of valid positions already in the cache.
+    """
+    b, one, _ = x.shape
+    s_max = cache["k"].shape[1]
+    pos = jnp.full((1,), cache_len, dtype=jnp.int32)
+    q = rope(dense(p["wq"], x).reshape(b, 1, num_heads, head_dim), pos, theta)
+    k_new = rope(dense(p["wk"], x).reshape(b, 1, num_kv_heads, head_dim), pos, theta)
+    v_new = dense(p["wv"], x).reshape(b, 1, num_kv_heads, head_dim)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), cache_len, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), cache_len, axis=1)
+
+    ki = jnp.arange(s_max)[None, :]
+    mask = ki <= cache_len
+    if window:
+        mask = mask & (ki > cache_len - window)
+    out = _sdpa(q, k, v, mask[:, None, None, :] if mask.ndim == 2 else mask)
+    y = dense(p["wo"], out.reshape(b, 1, num_heads * head_dim))
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MoE (sort-based ragged dispatch with static capacity — MegaBlocks-style)
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, d_model, num_experts, d_ff, num_shared=0, shared_d_ff=0):
+    kr, ke, ks = jax.random.split(key, 3)
+    k1, k2, k3 = jax.random.split(ke, 3)
+    p = {
+        "router": dense_init(kr, d_model, num_experts),
+        "w_gate": (jax.random.normal(k1, (num_experts, d_model, d_ff)) * 0.02).astype(DTYPE),
+        "w_up": (jax.random.normal(k2, (num_experts, d_model, d_ff)) * 0.02).astype(DTYPE),
+        "w_down": (jax.random.normal(k3, (num_experts, d_ff, d_model)) * 0.02).astype(DTYPE),
+    }
+    if num_shared:
+        p["shared"] = mlp_init(ks, d_model, shared_d_ff or d_ff)
+    return p
+
+
+def moe(p, x, *, num_experts, top_k, capacity_factor=1.25):
+    """Token-choice top-k MoE with static capacity.
+
+    Dispatch is sort-based: (expert, token) assignments are sorted by expert,
+    each expert processes a fixed-capacity contiguous slice (overflow tokens
+    are dropped, as in GShard/Switch), expert FFNs run as one block-diagonal
+    batched GEMM [E, C, D] x [E, D, F] that shards cleanly over the expert
+    (model) axis.
+    """
+    b, s, d = x.shape
+    n = b * s
+    xt = x.reshape(n, d)
+    m = n * top_k
+    capacity = int(np.ceil(m / num_experts * capacity_factor))
+    # Keep the expert GEMM well-formed even for tiny smoke configs.
+    capacity = max(capacity, 8)
+
+    logits = (xt @ p["router"]["w"].astype(jnp.float32)).astype(jnp.float32)  # [N, E]
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    # top_k for indices only; gate values are recovered through a one-hot
+    # einsum so the gradient path avoids batched-gather VJPs (top_k/
+    # take_along_axis) — the selection itself is a straight-through constant.
+    _, expert_ids = jax.lax.top_k(jax.lax.stop_gradient(logits), top_k)  # [N, K]
+    sel_onehot = jax.nn.one_hot(expert_ids, num_experts, dtype=jnp.float32)  # [N,K,E]
+    gate_vals = jnp.einsum("ne,nke->nk", gates_all, sel_onehot)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_expert = expert_ids.reshape(m).astype(jnp.int32)
+    flat_token = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, top_k)).reshape(m)
+
+    # Sort integer ids only (no float operand => no sort VJP); the gate for
+    # each sorted assignment is re-gathered by assignment id, whose gradient
+    # is a plain 1-D scatter-add.
+    assign_id = jnp.arange(m, dtype=jnp.int32)
+    sort_e, sort_t, sort_a = jax.lax.sort(
+        (flat_expert, flat_token, assign_id), dimension=0, is_stable=True, num_keys=1
+    )
+    sort_g = gate_vals.reshape(m)[sort_a]
+    group_start = jnp.searchsorted(sort_e, jnp.arange(num_experts, dtype=jnp.int32), side="left")
+    pos_in_group = jnp.arange(m, dtype=jnp.int32) - group_start[sort_e]
+    valid = pos_in_group < capacity
+    slot = jnp.where(valid, sort_e * capacity + pos_in_group, num_experts * capacity)
+
+    gathered = xt[sort_t]  # [M, D]
+    buf = jnp.zeros((num_experts * capacity, d), xt.dtype).at[slot].set(gathered, mode="drop")
+    buf = buf.reshape(num_experts, capacity, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["w_up"]
+    )
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(num_experts * capacity, d)
+
+    slot_c = jnp.minimum(slot, num_experts * capacity - 1)
+    contrib = out[slot_c] * (sort_g * valid).astype(out.dtype)[:, None]
+    y = jnp.zeros((n, d), out.dtype).at[sort_t].add(contrib)
+
+    if "shared" in p:
+        y = y + mlp(p["shared"], xt)
+
+    # Load-balance diagnostics (Switch aux loss), returned as metric.
+    me = jnp.mean(gates_all, axis=0)
+    ce = jnp.sum(sel_onehot, axis=(0, 1)) / m
+    aux = num_experts * jnp.sum(me * ce)
+    return y.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,175 @@
+"""Mamba-2 SSD block (arXiv:2405.21060) — chunked matmul form + decode recurrence.
+
+Train/prefill run the chunk-parallel SSD algorithm: intra-chunk attention-like
+blocks are dense einsums (MXU-friendly), inter-chunk state propagation is an
+associative scan over chunks — O(S) work, sub-quadratic sequence mixing, which
+is why the ssm/hybrid architectures run the long_500k shape.
+
+Decode is the O(1) recurrence over the (conv_state, ssm_state) cache.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import DTYPE, dense, dense_init, rms_norm, rms_norm_init
+
+
+def mamba2_init(key, cfg):
+    d = cfg.d_model
+    d_inner = cfg.d_inner
+    h = cfg.ssm_heads
+    n = cfg.ssm_state_dim
+    g = cfg.ssm_n_groups
+    conv_dim = d_inner + 2 * g * n
+    ks = jax.random.split(key, 5)
+    return {
+        # order: [z (d_inner), x (d_inner), B (g*n), C (g*n), dt (h)]
+        "in_proj": dense_init(ks[0], d, 2 * d_inner + 2 * g * n + h),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, conv_dim)) * 0.1).astype(DTYPE),
+        "conv_b": jnp.zeros((conv_dim,), DTYPE),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),
+        "norm": rms_norm_init(d_inner),
+        "out_proj": dense_init(ks[2], d_inner, d),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner = cfg.d_inner
+    g, n, h = cfg.ssm_n_groups, cfg.ssm_state_dim, cfg.ssm_heads
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : 2 * d_inner + 2 * g * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * g * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(w, b, xbc):
+    """Depthwise causal conv1d, kernel k. xbc: [B, S, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk):
+    """SSD Algorithm 1. x:[b,s,h,p] dt:[b,s,h] A:[h] B,C:[b,s,n] (groups=1).
+
+    Returns (y:[b,s,h,p], final_state:[b,h,p,n]).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    z = s // chunk
+    xc = x.reshape(b, z, chunk, h, p)
+    dtc = dt.reshape(b, z, chunk, h)
+    Bc = B.reshape(b, z, chunk, n)
+    Cc = C.reshape(b, z, chunk, n)
+
+    dtA = dtc * A[None, None, None, :]              # [b,z,c,h], negative
+    cum = jnp.cumsum(dtA, axis=2)                   # within-chunk cumulative
+
+    # Intra-chunk (diagonal) blocks.
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # [b,z,i,j,h]
+    ij_mask = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])[None, None, :, :, None]
+    L = jnp.where(ij_mask, jnp.exp(seg), 0.0)                 # [b,z,i,j,h]
+    cb = jnp.einsum("bzin,bzjn->bzij", Cc, Bc)                # [b,z,i,j]
+    w = cb[..., None] * L * dtc[:, :, None, :, :]             # [b,z,i,j,h]
+    y_diag = jnp.einsum("bzijh,bzjhp->bzihp", w.astype(x.dtype), xc)
+
+    # Per-chunk end states.
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)           # [b,z,c,h]
+    states = jnp.einsum(
+        "bzcn,bzch,bzchp->bzhpn", Bc, (decay_states * dtc).astype(x.dtype), xc
+    )                                                          # [b,z,h,p,n]
+
+    # Inter-chunk associative scan: state_z = decay_z * state_{z-1} + states_z.
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                   # [b,z,h]
+
+    def combine(a, b_):
+        d1, s1 = a
+        d2, s2 = b_
+        return d1 * d2, s1 * d2[..., None, None].astype(s1.dtype) + s2
+
+    dec_scan, state_scan = jax.lax.associative_scan(combine, (chunk_decay, states), axis=1)
+    final_state = state_scan[:, -1]                           # [b,h,p,n]
+    # State *entering* chunk z (exclusive scan).
+    prev = jnp.concatenate([jnp.zeros_like(state_scan[:, :1]), state_scan[:, :-1]], axis=1)
+
+    y_off = jnp.einsum("bzin,bzhpn,bzih->bzihp", Cc, prev, jnp.exp(cum).astype(x.dtype))
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def mamba2_forward(p, x, cfg, *, return_cache=False):
+    """Train/prefill. x: [B, S, d_model].
+
+    Sequences that are not a multiple of ssm_chunk are padded with dt=0 steps:
+    exp(0*A)=1 and dt*B(x)x=0, so padding neither decays nor perturbs the
+    state — the returned final_state is exact for the true length.
+    """
+    b, s, _ = x.shape
+    h, pdim, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state_dim, cfg.ssm_n_groups
+    z, xbc_raw, dt_raw = _split_proj(cfg, dense(p["in_proj"], x))
+    xbc = _causal_conv(p["conv_w"], p["conv_b"], xbc_raw)
+    sp = s + (-s) % cfg.ssm_chunk
+    pad = sp - s
+    if pad:
+        xbc_p = jnp.pad(xbc, ((0, 0), (0, pad), (0, 0)))
+        dt_raw_p = jnp.pad(dt_raw, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xbc_p, dt_raw_p = xbc, dt_raw
+    xs = xbc_p[..., : cfg.d_inner].reshape(b, sp, h, pdim)
+    Bm = xbc_p[..., cfg.d_inner : cfg.d_inner + g * n].reshape(b, sp, n)
+    Cm = xbc_p[..., cfg.d_inner + g * n :].reshape(b, sp, n)
+    dt = jax.nn.softplus(dt_raw_p.astype(jnp.float32) + p["dt_bias"])
+    if pad:
+        seq_mask = (jnp.arange(sp) < s)[None, :, None]
+        dt = dt * seq_mask
+    A = -jnp.exp(p["A_log"])
+
+    y, final_state = _ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * xs
+    y = y.reshape(b, sp, cfg.d_inner)[:, :s]
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = dense(p["out_proj"], y)
+    if return_cache:
+        k = cfg.conv_kernel
+        conv_state = jax.lax.dynamic_slice_in_dim(
+            jnp.pad(xbc_raw, ((0, 0), (k - 1, 0), (0, 0))), s, k - 1, axis=1
+        )
+        return out, {"conv": conv_state, "ssm": final_state}
+    return out
+
+
+def mamba2_decode(p, x, cache, cfg):
+    """One-token recurrence. x: [B, 1, d_model]; cache: {"conv","ssm"}."""
+    b = x.shape[0]
+    h, pdim, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state_dim, cfg.ssm_n_groups
+    k = cfg.conv_kernel
+    z, xbc_new, dt_raw = _split_proj(cfg, dense(p["in_proj"], x))
+
+    # conv cache: [B, k-1, conv_dim] of pre-activation inputs.
+    window = jnp.concatenate([cache["conv"], xbc_new], axis=1)  # [B, k, conv_dim]
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    )[:, None, :]
+    new_conv = window[:, 1:]
+
+    xs = conv_out[..., : cfg.d_inner].reshape(b, h, pdim)
+    Bm = conv_out[..., cfg.d_inner : cfg.d_inner + g * n].reshape(b, n)
+    Cm = conv_out[..., cfg.d_inner + g * n :].reshape(b, n)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B, h]
+    A = -jnp.exp(p["A_log"])
+
+    dA = jnp.exp(dt * A[None, :])                                  # [B, h]
+    state = cache["ssm"] * dA[..., None, None].astype(cache["ssm"].dtype)
+    state = state + jnp.einsum("bn,bh,bhp->bhpn", Bm, dt.astype(x.dtype), xs)
+    y = jnp.einsum("bn,bhpn->bhp", Cm, state)
+    y = y + p["D"][None, :, None].astype(y.dtype) * xs
+    y = y.reshape(b, 1, cfg.d_inner)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense(p["out_proj"], y), {"conv": new_conv, "ssm": state}

@@ -1,0 +1,116 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, arXiv:2412.19437).
+
+Train/prefill use the naive (decompressed) formulation; decode uses the
+weight-absorbed formulation, attending directly over the cached latent
+(c_kv [B, S, kv_lora] + k_pe [B, S, rope_dim]) without ever materializing
+per-head K/V for the full context — this is MLA's entire point, and on TPU it
+converts the decode KV stream from H*(nope+v) dims per token to
+(kv_lora + rope) dims per token (a ~14x HBM-traffic cut for V3's shapes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import DTYPE, NEG_INF, dense, dense_init, rms_norm, rms_norm_init, rope
+
+
+def mla_init(key, cfg):
+    d = cfg.d_model
+    h = cfg.num_heads
+    qk_nope, qk_rope, v_dim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_head = qk_nope + qk_rope
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": dense_init(ks[0], d, cfg.q_lora_rank),
+        "q_norm": rms_norm_init(cfg.q_lora_rank),
+        "wq_b": dense_init(ks[1], cfg.q_lora_rank, h * q_head),
+        "wkv_a": dense_init(ks[2], d, cfg.kv_lora_rank + qk_rope),
+        "kv_norm": rms_norm_init(cfg.kv_lora_rank),
+        "w_uk": (jax.random.normal(ks[3], (cfg.kv_lora_rank, h, qk_nope)) * 0.02).astype(DTYPE),
+        "w_uv": (jax.random.normal(ks[4], (cfg.kv_lora_rank, h, v_dim)) * 0.02).astype(DTYPE),
+        "wo": dense_init(ks[5], h * v_dim, d),
+    }
+
+
+def _project_latent(p, x, positions, cfg):
+    """Shared front half: q heads + latent (c_kv, k_pe)."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qk_nope, qk_rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = dense(p["wq_b"], rms_norm(p["q_norm"], dense(p["wq_a"], x), cfg.norm_eps))
+    q = q.reshape(b, s, h, qk_nope + qk_rope)
+    q_nope, q_pe = q[..., :qk_nope], q[..., qk_nope:]
+    q_pe = rope(q_pe, positions, cfg.rope_theta)
+
+    kv = dense(p["wkv_a"], x)
+    c_kv = rms_norm(p["kv_norm"], kv[..., : cfg.kv_lora_rank], cfg.norm_eps)
+    k_pe = kv[..., cfg.kv_lora_rank :].reshape(b, s, 1, qk_rope)
+    k_pe = rope(k_pe, positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_pe, c_kv, k_pe
+
+
+def mla_attention(p, x, positions, cfg, *, causal=True, return_cache=False,
+                  cache_pad_to=0):
+    """Naive (decompressed) MLA for train/prefill."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    scale = 1.0 / np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    q_nope, q_pe, c_kv, k_pe = _project_latent(p, x, positions, cfg)
+
+    k_nope = jnp.einsum("bsl,lhn->bshn", c_kv, p["w_uk"])
+    v = jnp.einsum("bsl,lhv->bshv", c_kv, p["w_uv"])
+
+    scores = (
+        jnp.einsum("bqhn,bshn->bhqs", q_nope, k_nope)
+        + jnp.einsum("bqhr,bsr->bhqs", q_pe, k_pe)
+    ).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.arange(s)[None, :] <= jnp.arange(s)[:, None]
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqs,bshv->bqhv", probs, v)
+    y = dense(p["wo"], out.reshape(b, s, h * cfg.v_head_dim))
+    if return_cache:
+        if cache_pad_to and cache_pad_to > s:
+            pad = cache_pad_to - s
+            c_kv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
+            k_pe = jnp.pad(k_pe, ((0, 0), (0, pad), (0, 0)))
+        return y, {"c_kv": c_kv, "k_pe": k_pe}
+    return y
+
+
+def mla_decode(p, x, cache, cache_len, cfg):
+    """Weight-absorbed single-token decode over the latent cache.
+
+    scores = q_nope' c_kv^T + q_pe k_pe^T   with q_nope' = q_nope W_uk
+    out    = (probs c_kv) W_uv              — no per-head K/V materialization.
+    """
+    b, one, _ = x.shape
+    h = cfg.num_heads
+    s_max = cache["c_kv"].shape[1]
+    scale = 1.0 / np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    pos = jnp.full((1,), cache_len, dtype=jnp.int32)
+    q_nope, q_pe, c_kv_new, k_pe_new = _project_latent(p, x, pos, cfg)
+
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), cache_len, axis=1
+    )
+    k_pe = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_pe"], k_pe_new.astype(cache["k_pe"].dtype), cache_len, axis=1
+    )
+
+    q_abs = jnp.einsum("bqhn,lhn->bqhl", q_nope, p["w_uk"])  # [B,1,H,kv_lora]
+    scores = (
+        jnp.einsum("bqhl,bsl->bhqs", q_abs, c_kv)
+        + jnp.einsum("bqhr,bsr->bhqs", q_pe, k_pe)
+    ).astype(jnp.float32) * scale
+    mask = jnp.arange(s_max)[None, None, None, :] <= cache_len
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out_latent = jnp.einsum("bhqs,bsl->bqhl", probs, c_kv)
+    out = jnp.einsum("bqhl,lhv->bqhv", out_latent, p["w_uv"])
+    y = dense(p["wo"], out.reshape(b, 1, h * cfg.v_head_dim))
+    return y, {"c_kv": c_kv, "k_pe": k_pe}

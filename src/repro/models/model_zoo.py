@@ -1,0 +1,272 @@
+"""Top-level model API: init / train / prefill / decode for every arch family.
+
+All entry points are pure jax functions of (cfg, params, batch) so they work
+under jit, eval_shape (abstract init for the 671B dry-run), and pjit sharding.
+
+Batch dicts ("extra" inputs are the modality stubs the assignment specifies):
+  train   : tokens [B,St] int32, labels [B,St] int32
+            (+ patch_embeds [B,P,D] bf16 for vlm; frames [B,Se,D] bf16 for audio)
+  prefill : tokens [B,S] (+ stubs)
+  decode  : token [B,1], caches (from prefill), cache_len [] int32
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.dist.sharding import hint
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.train.options import PerfOptions, resolve as resolve_options
+
+# Encoder frame count for the audio (enc-dec) architecture, all shapes.
+AUDIO_ENC_LEN = 4096
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 8)
+    params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model)) * 0.02).astype(L.DTYPE),
+        "final_norm": L.rms_norm_init(cfg.d_model),
+        "lm_head": (jax.random.normal(ks[1], (cfg.d_model, cfg.vocab_size)) * 0.02).astype(L.DTYPE),
+    }
+    plan = T.decoder_plan(cfg)
+    gkeys = jax.random.split(ks[2], len(plan))
+    params["groups"] = [
+        T.group_init(gkeys[i], cfg, count, descs, cross=cfg.is_encoder_decoder)
+        for i, (count, descs) in enumerate(plan)
+    ]
+    if cfg.has_vision_stub:
+        params["vision_proj"] = L.dense_init(ks[3], cfg.d_model, cfg.d_model)
+    if cfg.is_encoder_decoder:
+        params["enc_groups"] = [
+            T.group_init(ks[4], cfg, cfg.num_encoder_layers, [("attn", "mlp")])
+        ]
+        params["enc_final_norm"] = L.rms_norm_init(cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _encode(cfg, params, frames, options=None):
+    """Audio encoder over stub frame embeddings (bidirectional)."""
+    opts = resolve_options(options)
+    x = frames.astype(L.DTYPE)
+    positions = jnp.arange(x.shape[1])
+    for gp, (count, descs) in zip(params["enc_groups"], [(cfg.num_encoder_layers, [("attn", "mlp")])]):
+        x, _ = T.group_apply_train(cfg, gp, descs, x, positions, causal=False,
+                                   remat_policy=opts.remat_policy, unroll=opts.scan_unroll,
+                                   zero3_gather=opts.zero3_gather)
+    return L.rms_norm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+def _embed_inputs(cfg, params, tokens, batch, opts=None):
+    """Token embeddings (+ prepended projected patch embeddings for vlm)."""
+    embed = params["embed"]
+    if opts is not None and opts.zero3_gather:
+        # ZeRO-3 regather: vocab stays TP-sharded; drop the FSDP dim so the
+        # token gather does not reshard the batch (DESIGN.md §6 / §Perf H2).
+        embed = hint(embed, "model", None)
+    x = embed[tokens]
+    n_prefix = 0
+    if cfg.has_vision_stub:
+        pe = L.dense(params["vision_proj"], batch["patch_embeds"].astype(L.DTYPE))
+        x = jnp.concatenate([pe, x], axis=1)
+        n_prefix = pe.shape[1]
+    return x, n_prefix
+
+
+def _head(cfg, params, x, opts=None):
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    lm_head = params["lm_head"]
+    if opts is not None and opts.zero3_gather:
+        # Contraction-dim FSDP sharding on the head makes the partitioner
+        # replicate the batch for the logits matmul — and that replication
+        # poisons the whole backward pass. Regather to TP-only instead.
+        lm_head = hint(lm_head, None, "model")
+    return x @ lm_head
+
+
+# ---------------------------------------------------------------------------
+# train / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def apply_train(cfg: ModelConfig, params, batch, options=None):
+    """Returns (logits [B,St,V], aux_loss scalar)."""
+    opts = resolve_options(options)
+    L.set_attn_seq_shard(opts.attn_seq_shard)
+    tokens = batch["tokens"]
+    enc_out = _encode(cfg, params, batch["frames"], options) if cfg.is_encoder_decoder else None
+    x, n_prefix = _embed_inputs(cfg, params, tokens, batch, opts)
+    positions = jnp.arange(x.shape[1])
+    aux = jnp.zeros((), jnp.float32)
+    for gp, (count, descs) in zip(params["groups"], T.decoder_plan(cfg)):
+        x, a = T.group_apply_train(cfg, gp, descs, x, positions, enc_out=enc_out,
+                                   remat_policy=opts.remat_policy, unroll=opts.scan_unroll,
+                                   zero3_gather=opts.zero3_gather)
+        aux = aux + a
+    if n_prefix:
+        x = x[:, n_prefix:]
+    return _head(cfg, params, x, opts), aux
+
+
+def apply_prefill(cfg: ModelConfig, params, batch, cache_pad_to=0, options=None):
+    """Returns (last-position logits [B,V], caches).
+
+    cache_pad_to reserves cache room for decode appends beyond the prompt."""
+    opts = resolve_options(options)
+    L.set_attn_seq_shard(opts.attn_seq_shard)
+    tokens = batch["tokens"]
+    enc_out = _encode(cfg, params, batch["frames"], options) if cfg.is_encoder_decoder else None
+    x, n_prefix = _embed_inputs(cfg, params, tokens, batch, opts)
+    positions = jnp.arange(x.shape[1])
+    caches = []
+    for gp, (count, descs) in zip(params["groups"], T.decoder_plan(cfg)):
+        x, c = T.group_apply_prefill(cfg, gp, descs, x, positions, enc_out=enc_out,
+                                     cache_pad_to=cache_pad_to, unroll=opts.scan_unroll,
+                                     zero3_gather=opts.zero3_gather)
+        caches.append(c)
+    logits = _head(cfg, params, x[:, -1:], opts)[:, 0]
+    return logits, caches
+
+
+def apply_decode(cfg: ModelConfig, params, token, caches, cache_len, options=None):
+    """One-token step. Returns (logits [B,V], new caches)."""
+    opts = resolve_options(options)
+    embed = params["embed"]
+    if opts.zero3_gather:
+        embed = hint(embed, "model", None)
+    x = embed[token]  # [B, 1, D]
+    new_caches = []
+    for gp, c, (count, descs) in zip(params["groups"], caches, T.decoder_plan(cfg)):
+        x, nc = T.group_apply_decode(cfg, gp, descs, x, c, cache_len,
+                                     unroll=opts.scan_unroll,
+                                     zero3_gather=opts.zero3_gather)
+        new_caches.append(nc)
+    return _head(cfg, params, x, opts)[:, 0], new_caches
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """Abstract inputs for one (arch x shape) dry-run cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        st = s - cfg.num_patches if cfg.has_vision_stub else s
+        batch = {
+            "tokens": _sds((b, st), jnp.int32),
+            "labels": _sds((b, st), jnp.int32),
+        }
+        if cfg.has_vision_stub:
+            batch["patch_embeds"] = _sds((b, cfg.num_patches, cfg.d_model), L.DTYPE)
+        if cfg.is_encoder_decoder:
+            batch["frames"] = _sds((b, AUDIO_ENC_LEN, cfg.d_model), L.DTYPE)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        st = s - cfg.num_patches if cfg.has_vision_stub else s
+        batch = {"tokens": _sds((b, st), jnp.int32)}
+        if cfg.has_vision_stub:
+            batch["patch_embeds"] = _sds((b, cfg.num_patches, cfg.d_model), L.DTYPE)
+        if cfg.is_encoder_decoder:
+            batch["frames"] = _sds((b, AUDIO_ENC_LEN, cfg.d_model), L.DTYPE)
+        return {"batch": batch}
+    if shape.kind == "decode":
+        caches = cache_specs(cfg, b, s)
+        return {
+            "token": _sds((b, 1), jnp.int32),
+            "caches": caches,
+            "cache_len": _sds((), jnp.int32),
+        }
+    raise ValueError(shape.kind)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int):
+    """Abstract KV/state caches for a decode step with context s_max.
+
+    Derived via eval_shape of the prefill program so cache pytrees can never
+    drift from what apply_prefill actually returns.
+    """
+    prefill_batch = {"tokens": _sds((batch, s_max), jnp.int32)}
+    if cfg.has_vision_stub:
+        prefill_batch = {
+            "tokens": _sds((batch, s_max - cfg.num_patches), jnp.int32),
+            "patch_embeds": _sds((batch, cfg.num_patches, cfg.d_model), L.DTYPE),
+        }
+    if cfg.is_encoder_decoder:
+        prefill_batch["frames"] = _sds((batch, AUDIO_ENC_LEN, cfg.d_model), L.DTYPE)
+    params = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    _, caches = jax.eval_shape(lambda p, bt: apply_prefill(cfg, p, bt), params, prefill_batch)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter / FLOP model (roofline §)
+# ---------------------------------------------------------------------------
+
+
+def count_params_analytic(cfg: ModelConfig, active_only=False):
+    """Parameter count via abstract init (no allocation).
+
+    active_only: routed-expert weights scaled by (top_k / num_experts) —
+    the per-token active parameter count used for MoE MODEL_FLOPS.
+    """
+    params = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        size = int(np.prod(leaf.shape))
+        path_s = jax.tree_util.keystr(path)
+        if active_only and "moe" in path_s and leaf.ndim == 4:
+            # stacked routed experts [layers, E, ...]
+            size = int(size * cfg.num_experts_per_tok / cfg.num_experts)
+        total += size
+    return total
+
+
+def count_embedding_params(cfg: ModelConfig):
+    return cfg.vocab_size * cfg.d_model * 2  # embed + lm_head
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """Useful MODEL_FLOPS for one step (6*N*T train / 2*N*T inference
+    + quadratic attention term). MoE uses active params."""
+    n_active = count_params_analytic(cfg, active_only=True) - count_embedding_params(cfg)
+    n_active += cfg.d_model * cfg.vocab_size  # lm_head matmul is real work
+    b, s = shape.global_batch, shape.seq_len
+
+    n_attn_layers = sum(1 for i in range(cfg.num_layers) if cfg.is_attn_layer(i))
+    hd = cfg.resolved_head_dim if not cfg.use_mla else (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    h = cfg.num_heads
+
+    if shape.kind == "train":
+        tok = b * s
+        attn = 3 * 2 * 2 * b * (s * s / 2) * h * hd * n_attn_layers  # bwd x (QK^T + PV), causal
+        return 6.0 * n_active * tok + attn
+    if shape.kind == "prefill":
+        tok = b * s
+        attn = 2 * 2 * b * (s * s / 2) * h * hd * n_attn_layers
+        return 2.0 * n_active * tok + attn
+    # decode: one token against an s-long context
+    attn = 2 * 2 * b * s * h * hd * n_attn_layers
+    ssm_layers = sum(1 for i in range(cfg.num_layers) if not cfg.is_attn_layer(i)) if cfg.family in ("ssm", "hybrid") else 0
+    ssm = 2 * b * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state_dim * ssm_layers * 3 if ssm_layers else 0
+    return 2.0 * n_active * b + attn + ssm

@@ -1,0 +1,282 @@
+"""Generic decoder-only LM covering dense / GQA / MLA / MoE / SSM / hybrid.
+
+A model is a sequence of *scan groups*. Each group is `count` identical scan
+units; a unit is a short list of sublayer descriptors (mixer, ffn):
+
+  dense/moe/vlm : [ (attn|mla, mlp|moe) ] x num_layers      (1 group, or 2 for
+                   deepseek's first-k-dense prefix)
+  ssm           : [ (mamba, none) ] x num_layers
+  hybrid(jamba) : one unit = 8 sublayers  [m,m,m,m,a,m,m,m] with moe on odd
+                   positions, scanned over num_layers/8 superblocks
+
+Units are homogeneous within a group, so parameters stack on a leading axis
+and `lax.scan` keeps the HLO size O(distinct unit structures), not O(layers) —
+this is what keeps the 61-layer/512-device dry-run compiles tractable.
+Training bodies are wrapped in jax.checkpoint (full per-unit remat).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import regather_params_tp
+from repro.models import layers as L
+from repro.models import mamba2, mla
+
+# Scan groups with at most this many units are always fully unrolled under
+# partial-unroll cost accounting (leaves exactly one while loop per model for
+# the two-point extrapolation in launch/dryrun.py).
+FULL_UNROLL_THRESHOLD = 8
+
+
+def _resolve_unroll(unroll, n_units: int) -> int:
+    if unroll in (-1, True) or n_units <= FULL_UNROLL_THRESHOLD:
+        return n_units
+    if unroll and unroll > 0:
+        return min(int(unroll), n_units)
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# plans
+# ---------------------------------------------------------------------------
+
+
+def decoder_plan(cfg: ModelConfig):
+    """[(count, [(mixer, ffn), ...]), ...] — scan groups for the decoder."""
+    if cfg.family == "hybrid":
+        period = cfg.attn_layer_period
+        assert cfg.num_layers % period == 0
+        descs = []
+        for j in range(period):
+            mixer = "attn" if j == cfg.attn_layer_offset else "mamba"
+            ffn = "moe" if cfg.is_moe_layer(j) else "mlp"
+            descs.append((mixer, ffn))
+        return [(cfg.num_layers // period, descs)]
+    if cfg.family == "ssm":
+        return [(cfg.num_layers, [("mamba", "none")])]
+    mixer = "mla" if cfg.use_mla else "attn"
+    groups = []
+    if cfg.first_k_dense:
+        groups.append((cfg.first_k_dense, [(mixer, "mlp")]))
+    ffn = "moe" if cfg.num_experts else "mlp"
+    groups.append((cfg.num_layers - cfg.first_k_dense, [(mixer, ffn)]))
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# sublayers
+# ---------------------------------------------------------------------------
+
+
+def sublayer_init(key, cfg: ModelConfig, mixer: str, ffn: str, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"ln1": L.rms_norm_init(cfg.d_model)}
+    if mixer == "attn":
+        p["attn"] = L.attn_init(
+            ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim,
+            qkv_bias=cfg.qkv_bias,
+        )
+    elif mixer == "mla":
+        p["mla"] = mla.mla_init(ks[0], cfg)
+    elif mixer == "mamba":
+        p["mamba"] = mamba2.mamba2_init(ks[0], cfg)
+    else:
+        raise ValueError(mixer)
+    if cross:
+        p["ln_cross"] = L.rms_norm_init(cfg.d_model)
+        p["cross"] = L.attn_init(
+            ks[1], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+        )
+    if ffn != "none":
+        p["ln2"] = L.rms_norm_init(cfg.d_model)
+        if ffn == "moe":
+            p["moe"] = L.moe_init(
+                ks[2], cfg.d_model, cfg.num_experts, cfg.moe_d_ff,
+                num_shared=cfg.num_shared_experts, shared_d_ff=cfg.moe_d_ff,
+            )
+        else:
+            p["mlp"] = L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def _attn_kwargs(cfg: ModelConfig):
+    return dict(
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        theta=cfg.rope_theta,
+    )
+
+
+def _cross_kv(cfg, p, enc_out):
+    """Per-layer cross-attention K/V from the encoder output."""
+    b, se, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = L.dense(p["wk"], enc_out).reshape(b, se, cfg.num_kv_heads, hd)
+    v = L.dense(p["wv"], enc_out).reshape(b, se, cfg.num_kv_heads, hd)
+    return {"k": k, "v": v}
+
+
+def _cross_attention(cfg, p, x, kv):
+    """Cross-attention over (cached) encoder K/V — bidirectional, no RoPE."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = L.dense(p["wq"], x).reshape(b, s, cfg.num_heads, hd)
+    mask = jnp.ones((1, 1, s, kv["k"].shape[1]), bool)
+    out = L._sdpa(q, kv["k"], kv["v"], mask)
+    return L.dense(p["wo"], out.reshape(b, s, cfg.num_heads * hd))
+
+
+def sublayer_apply(cfg: ModelConfig, p, x, positions, mode, cache=None,
+                   cache_len=None, enc_out=None, causal=True, cache_pad_to=0):
+    """Returns (x, new_cache, aux).
+
+    enc_out: encoder output for cross-attention sublayers (train/prefill);
+    at decode the per-layer cross K/V come from the cache instead.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(p["ln1"], x, cfg.norm_eps)
+    new_cache: dict[str, Any] = {}
+    if "attn" in p:
+        kw = _attn_kwargs(cfg)
+        if mode == "train":
+            a = L.attention(p["attn"], h, positions, causal=causal, **kw)
+        elif mode == "prefill":
+            a, c = L.attention_prefill(p["attn"], h, positions, cache_pad_to=cache_pad_to, **kw)
+            new_cache["attn"] = c
+        else:
+            s_max = cache["attn"]["k"].shape[1]
+            window = cfg.sliding_window if (cfg.sliding_window and s_max > 100_000) else 0
+            a, c = L.attention_decode(p["attn"], h, cache["attn"], cache_len, window=window, **kw)
+            new_cache["attn"] = c
+    elif "mla" in p:
+        if mode == "train":
+            a = mla.mla_attention(p["mla"], h, positions, cfg)
+        elif mode == "prefill":
+            a, c = mla.mla_attention(p["mla"], h, positions, cfg, return_cache=True,
+                                     cache_pad_to=cache_pad_to)
+            new_cache["mla"] = c
+        else:
+            a, c = mla.mla_decode(p["mla"], h, cache["mla"], cache_len, cfg)
+            new_cache["mla"] = c
+    elif "mamba" in p:
+        if mode == "train":
+            a = mamba2.mamba2_forward(p["mamba"], h, cfg)
+        elif mode == "prefill":
+            a, c = mamba2.mamba2_forward(p["mamba"], h, cfg, return_cache=True)
+            new_cache["mamba"] = c
+        else:
+            a, c = mamba2.mamba2_decode(p["mamba"], h, cache["mamba"], cfg)
+            new_cache["mamba"] = c
+    else:
+        raise ValueError("sublayer has no mixer")
+    x = x + a
+
+    if "cross" in p:
+        hc = L.rms_norm(p["ln_cross"], x, cfg.norm_eps)
+        if mode == "decode":
+            kv = cache["cross"]
+        else:
+            kv = _cross_kv(cfg, p["cross"], enc_out)
+        if mode == "prefill":
+            new_cache["cross"] = kv
+        elif mode == "decode":
+            new_cache["cross"] = kv
+        x = x + _cross_attention(cfg, p["cross"], hc, kv)
+
+    if "mlp" in p or "moe" in p:
+        h2 = L.rms_norm(p["ln2"], x, cfg.norm_eps)
+        if "moe" in p:
+            y, aux = L.moe(
+                p["moe"], h2, num_experts=cfg.num_experts,
+                top_k=cfg.num_experts_per_tok, capacity_factor=cfg.moe_capacity_factor,
+            )
+        else:
+            y = L.mlp(p["mlp"], h2, cfg.act)
+        x = x + y
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# scan groups
+# ---------------------------------------------------------------------------
+
+
+def group_init(key, cfg: ModelConfig, count: int, descs, cross: bool = False):
+    """Stacked params: {"sub{j}": params stacked on axis 0 (count)}."""
+    def unit_init(k):
+        ks = jax.random.split(k, len(descs))
+        return {f"sub{j}": sublayer_init(ks[j], cfg, m, f, cross=cross)
+                for j, (m, f) in enumerate(descs)}
+
+    keys = jax.random.split(key, count)
+    return jax.vmap(unit_init)(keys)
+
+
+def group_apply_train(cfg, group_params, descs, x, positions, enc_out=None, causal=True,
+                      remat_policy="full", unroll=False, zero3_gather=False):
+    def body(carry, unit_p):
+        x, aux = carry
+        if zero3_gather:
+            unit_p = regather_params_tp(unit_p)
+        for j in range(len(descs)):
+            x, _, a = sublayer_apply(cfg, unit_p[f"sub{j}"], x, positions, "train",
+                                     enc_out=enc_out, causal=causal)
+            aux = aux + a
+        return (x, aux), None
+
+    if remat_policy == "full":
+        body = jax.checkpoint(body)
+    elif remat_policy == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    elif remat_policy != "none":
+        raise ValueError(remat_policy)
+    n_units = jax.tree_util.tree_leaves(group_params)[0].shape[0]
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), group_params,
+                               unroll=_resolve_unroll(unroll, n_units))
+    return x, aux
+
+
+def group_apply_prefill(cfg, group_params, descs, x, positions, enc_out=None,
+                        cache_pad_to=0, unroll=False, zero3_gather=False):
+    def body(x, unit_p):
+        caches = {}
+        if zero3_gather:
+            unit_p = regather_params_tp(unit_p)
+        for j in range(len(descs)):
+            x, c, _ = sublayer_apply(cfg, unit_p[f"sub{j}"], x, positions, "prefill",
+                                     enc_out=enc_out, cache_pad_to=cache_pad_to)
+            caches[f"sub{j}"] = c
+        return x, caches
+
+    n_units = jax.tree_util.tree_leaves(group_params)[0].shape[0]
+    x, caches = jax.lax.scan(body, x, group_params,
+                             unroll=_resolve_unroll(unroll, n_units))
+    return x, caches
+
+
+def group_apply_decode(cfg, group_params, descs, x, caches, cache_len, unroll=False,
+                       zero3_gather=False):
+    def body(x, inp):
+        unit_p, cache = inp
+        new_caches = {}
+        if zero3_gather:
+            unit_p = regather_params_tp(unit_p)
+        for j in range(len(descs)):
+            x, c, _ = sublayer_apply(cfg, unit_p[f"sub{j}"], x, None, "decode",
+                                     cache=cache[f"sub{j}"], cache_len=cache_len)
+            new_caches[f"sub{j}"] = c
+        return x, new_caches
+
+    n_units = jax.tree_util.tree_leaves(group_params)[0].shape[0]
+    x, new_caches = jax.lax.scan(body, x, (group_params, caches),
+                                 unroll=_resolve_unroll(unroll, n_units))
+    return x, new_caches

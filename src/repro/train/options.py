@@ -1,0 +1,43 @@
+"""Performance knobs for the §Perf hillclimb — every option preserves
+semantics; each is OFF in the paper-faithful baseline and toggled one at a
+time in EXPERIMENTS.md §Perf with before/after roofline terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfOptions:
+    # Vocab-sharded cross entropy: keep logits sharded over the model axis
+    # through the loss (one-hot einsum + sharded logsumexp) instead of letting
+    # the partitioner all-gather [B,S,V] fp32 logits for take_along_axis.
+    sharded_loss: bool = False
+    # ZeRO-3 weight regather: params live FSDP-sharded, and each scan body
+    # re-constrains its layer slice to a TP-only layout — one weight
+    # all-gather per layer instead of partial-matmul + activation all-reduce
+    # (the partitioner's default resolution of contraction-dim sharding).
+    zero3_gather: bool = False
+    # Inference layout for serve steps: no FSDP, experts EP over data x model,
+    # dense weights TP-only (dist/sharding.py param_pspec(serve=True)).
+    serve_sharding: bool = False
+    # Sequence-sharded attention activations (see layers.set_attn_seq_shard).
+    attn_seq_shard: bool = False
+    # Rematerialization: "full" (per-unit checkpoint, baseline), "dots"
+    # (save matmul outputs — recompute only elementwise), "none".
+    remat_policy: str = "full"
+    # Unroll layer scans (int): 0 = keep loops, -1 = full unroll, u > 0 =
+    # u units per loop iteration (groups with <= 8 units always fully
+    # unroll). Only used by the dry-run: XLA cost analysis counts a
+    # while-loop body ONCE, so exact HLO flop/byte/collective accounting uses
+    # two partial-unroll compiles (u=1, u=2) and extrapolates
+    # true = f1 + (C-1) * (f2 - f1). Numerically identical math.
+    scan_unroll: int = 0
+
+
+BASELINE = PerfOptions()
+
+
+def resolve(options: "PerfOptions | None") -> PerfOptions:
+    return options if options is not None else BASELINE

@@ -1,0 +1,80 @@
+"""Training / serving step functions (the units the dry-run lowers)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model_zoo as zoo
+from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
+from repro.train.options import PerfOptions, resolve as resolve_options
+
+
+from repro.dist.sharding import hint as _maybe_constrain
+
+
+def softmax_xent(logits, labels, sharded: bool = False):
+    """Token-mean cross entropy, fp32 accumulation, bf16 logits in.
+
+    sharded=True keeps the vocab dimension sharded through the loss: the
+    label logit is extracted with a fused iota-compare-reduce (partial over
+    the local vocab shard + tiny all-reduce) and logsumexp reduces the
+    sharded axis in place — the partitioner never all-gathers [B,S,V] fp32
+    logits, which is the single largest collective in the naive train step
+    for large-vocab models (EXPERIMENTS.md §Perf/H1).
+    """
+    lf = logits.astype(jnp.float32)
+    if sharded:
+        lf = _maybe_constrain(lf, ("pod", "data"), None, "model")
+        m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+        vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+        gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], lf, 0.0), axis=-1)
+        return jnp.mean(lse - gold)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def make_train_step(cfg: ModelConfig, ocfg: AdamConfig, options: PerfOptions | None = None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    opts = resolve_options(options)
+
+    def train_step(params, opt_state: AdamState, batch):
+        def loss_fn(p):
+            logits, aux = zoo.apply_train(cfg, p, batch, options=opts)
+            loss = softmax_xent(logits, batch["labels"], sharded=opts.sharded_loss)
+            return loss + 0.01 * aux, (loss, aux)
+
+        (_, (loss, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt, om = adam_update(ocfg, params, grads, opt_state)
+        metrics = {"loss": loss, "aux_loss": aux, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, options: PerfOptions | None = None):
+    opts = resolve_options(options)
+
+    def prefill_step(params, batch):
+        return zoo.apply_prefill(cfg, params, batch, options=opts)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, options: PerfOptions | None = None):
+    opts = resolve_options(options)
+
+    def decode_step(params, token, caches, cache_len):
+        logits, new_caches = zoo.apply_decode(cfg, params, token, caches, cache_len,
+                                              options=opts)
+        return logits, new_caches, cache_len + 1
+
+    return decode_step
+
+
+def init_train_state(cfg: ModelConfig, ocfg: AdamConfig, key):
+    params = zoo.init_params(cfg, key)
+    return params, adam_init(ocfg, params)

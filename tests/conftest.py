@@ -1,0 +1,19 @@
+"""Shared pytest config.
+
+The full suite compiles many hundreds of XLA CPU executables in one process;
+without releasing them the ORC JIT eventually fails with
+"INTERNAL: Failed to materialize symbols". Dropping jax's compilation caches
+between test modules keeps the resident executable count bounded.
+"""
+
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()
+    gc.collect()

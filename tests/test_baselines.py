@@ -1,0 +1,93 @@
+"""Sorted-array and cuckoo-hash baselines (paper §5.1, Table 1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import semantics as sem
+from repro.core.sorted_array import (
+    SAConfig,
+    sa_init,
+    sa_bulk_build,
+    sa_insert,
+    sa_delete,
+    sa_lookup,
+    sa_count,
+    sa_range,
+)
+from repro.core.cuckoo import CuckooConfig, cuckoo_build, cuckoo_lookup
+
+
+class TestSortedArray:
+    def test_build_and_lookup(self):
+        cfg = SAConfig(capacity=64)
+        st = sa_bulk_build(cfg, jnp.arange(16) * 2, jnp.arange(16))
+        f, v = sa_lookup(cfg, st, jnp.array([0, 2, 3, 30]))
+        np.testing.assert_array_equal(f, [True, True, False, True])
+        np.testing.assert_array_equal(np.where(np.asarray(f), np.asarray(v), -1), [0, 1, -1, 15])
+
+    def test_batch_insert_overwrites(self):
+        cfg = SAConfig(capacity=64)
+        st = sa_bulk_build(cfg, jnp.arange(8), jnp.zeros(8, jnp.int32))
+        st = sa_insert(cfg, st, jnp.arange(8), jnp.arange(8) + 100)
+        f, v = sa_lookup(cfg, st, jnp.arange(8))
+        assert bool(f.all())
+        np.testing.assert_array_equal(v, np.arange(8) + 100)
+
+    def test_delete_via_tombstones(self):
+        cfg = SAConfig(capacity=64)
+        st = sa_bulk_build(cfg, jnp.arange(8), jnp.arange(8))
+        st = sa_delete(cfg, st, jnp.array([0, 2, 4, 6]))
+        f, _ = sa_lookup(cfg, st, jnp.arange(8))
+        np.testing.assert_array_equal(f, [False, True, False, True, False, True, False, True])
+
+    def test_count_and_range(self):
+        cfg = SAConfig(capacity=64)
+        st = sa_bulk_build(cfg, jnp.arange(16), jnp.arange(16) * 10)
+        st = sa_delete(cfg, st, jnp.array([4, 5]))
+        c, ok = sa_count(cfg, st, jnp.array([2]), jnp.array([8]), 32)
+        assert bool(ok[0]) and int(c[0]) == 5  # 2,3,6,7,8
+        ks, vs, cnt, ok = sa_range(cfg, st, jnp.array([2]), jnp.array([8]), 32, 8)
+        np.testing.assert_array_equal(np.asarray(ks[0][:5]), [2, 3, 6, 7, 8])
+        np.testing.assert_array_equal(np.asarray(vs[0][:5]), [20, 30, 60, 70, 80])
+
+    def test_matches_lsm_query_results(self):
+        from repro.core import LSMConfig, lsm_init, lsm_insert, lsm_delete, lsm_lookup
+
+        rng = np.random.default_rng(3)
+        lsm_cfg = LSMConfig(batch_size=8, num_levels=4)
+        sa_cfg = SAConfig(capacity=lsm_cfg.capacity)
+        lsm = lsm_init(lsm_cfg)
+        sa = sa_init(sa_cfg)
+        for i in range(5):
+            ks = rng.choice(128, 8, replace=False)
+            lsm = lsm_insert(lsm_cfg, lsm, jnp.array(ks), jnp.array(ks + 1))
+            sa = sa_insert(sa_cfg, sa, jnp.array(ks), jnp.array(ks + 1))
+        dels = rng.choice(128, 8, replace=False)
+        lsm = lsm_delete(lsm_cfg, lsm, jnp.array(dels))
+        sa = sa_delete(sa_cfg, sa, jnp.array(dels))
+        q = jnp.arange(128)
+        f1, v1 = lsm_lookup(lsm_cfg, lsm, q)
+        f2, v2 = sa_lookup(sa_cfg, sa, q)
+        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+        np.testing.assert_array_equal(
+            np.where(np.asarray(f1), np.asarray(v1), 0), np.where(np.asarray(f2), np.asarray(v2), 0)
+        )
+
+
+class TestCuckoo:
+    @pytest.mark.parametrize("n,load", [(100, 0.8), (1000, 0.8), (4000, 0.6)])
+    def test_build_and_lookup(self, n, load):
+        rng = np.random.default_rng(n)
+        keys = rng.choice(1 << 20, n, replace=False).astype(np.int32)
+        vals = (keys * 7 % 1009).astype(np.int32)
+        cfg = CuckooConfig(table_size=int(n / load), max_rounds=200)
+        table = cuckoo_build(cfg, jnp.array(keys), jnp.array(vals))
+        assert bool(table.build_ok)
+        f, v = cuckoo_lookup(cfg, table, jnp.array(keys[:512]))
+        assert bool(f.all())
+        np.testing.assert_array_equal(np.asarray(v), vals[:512])
+        # misses
+        miss = jnp.array((keys[:128] + (1 << 21)).astype(np.int32))
+        f, _ = cuckoo_lookup(cfg, table, miss)
+        assert not bool(f.any())

@@ -1,0 +1,130 @@
+"""Distributed (range-partitioned, shard_map) LSM vs the single-device LSM.
+
+Runs with 4 forced host devices — requires its own process so the forced
+device count is set before jax initializes (see conftest: this file must not
+import jax at module scope before the env var)."""
+
+import os
+import sys
+
+# Force 4 CPU devices BEFORE jax initializes. pytest imports this module in
+# the main process; guard so the flag only applies when jax is not yet live.
+if "jax" not in sys.modules:
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=4 " + os.environ.get("XLA_FLAGS", "")
+    )
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LSMConfig, lsm_init, lsm_update, lsm_lookup, lsm_count
+from repro.core import semantics as sem
+from repro.core.distributed import (
+    DistLSMConfig,
+    dist_lsm_init,
+    make_dist_cleanup,
+    make_dist_count,
+    make_dist_lookup,
+    make_dist_range,
+    make_dist_update,
+)
+
+NEEDS_DEVICES = pytest.mark.skipif(
+    len(jax.devices()) < 4, reason="needs 4 forced host devices"
+)
+
+B = 16
+
+
+@pytest.fixture()
+def setup():
+    # Function-scoped: make_dist_update donates its state argument, so every
+    # test needs fresh buffers.
+    mesh = jax.make_mesh((4,), ("shard",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = DistLSMConfig(local=LSMConfig(batch_size=B, num_levels=4), num_shards=4)
+    states = dist_lsm_init(cfg, mesh)
+    return mesh, cfg, states
+
+
+@NEEDS_DEVICES
+def test_dist_matches_single_device_reference(setup):
+    mesh, cfg, states = setup
+    rng = np.random.default_rng(0)
+    update = make_dist_update(cfg, mesh)
+    lookup = make_dist_lookup(cfg, mesh)
+    count = make_dist_count(cfg, mesh, max_candidates=cfg.local.capacity)
+
+    # Single-device oracle with the same global batches.
+    ref_cfg = LSMConfig(batch_size=B, num_levels=6)
+    ref = lsm_init(ref_cfg)
+
+    all_keys = []
+    for step in range(6):
+        keys = rng.choice(sem.MAX_USER_KEY, B, replace=False).astype(np.int32)
+        dels = rng.random(B) < 0.25
+        kv = jnp.asarray(np.where(dels, keys * 2, keys * 2 + 1).astype(np.int32))
+        vals = jnp.asarray(np.where(dels, 0, keys % 997).astype(np.int32))
+        states = update(states, kv, vals)
+        ref = lsm_update(ref_cfg, ref, kv, vals)
+        all_keys.extend(keys.tolist())
+
+    q = jnp.asarray(np.array(all_keys + [1, 2, 3], dtype=np.int32))
+    f_d, v_d = lookup(states, q)
+    f_r, v_r = lsm_lookup(ref_cfg, ref, q)
+    np.testing.assert_array_equal(np.asarray(f_d), np.asarray(f_r))
+    np.testing.assert_array_equal(
+        np.where(np.asarray(f_d), np.asarray(v_d), 0),
+        np.where(np.asarray(f_r), np.asarray(v_r), 0),
+    )
+
+    k1 = jnp.asarray(np.array([0, 10_000, 0], dtype=np.int32))
+    k2 = jnp.asarray(np.array([sem.MAX_USER_KEY, 20_000_000, 1000], dtype=np.int32))
+    c_d, ok_d = count(states, k1, k2)
+    c_r, ok_r = lsm_count(ref_cfg, ref, k1, k2, ref_cfg.capacity)
+    assert bool(ok_d.all()) and bool(ok_r.all())
+    np.testing.assert_array_equal(np.asarray(c_d), np.asarray(c_r))
+
+
+@NEEDS_DEVICES
+def test_dist_range_is_globally_sorted(setup):
+    mesh, cfg, states = setup
+    rng = np.random.default_rng(7)
+    update = make_dist_update(cfg, mesh)
+    rquery = make_dist_range(cfg, mesh, max_candidates=64, max_results=64)
+
+    keys = rng.choice(sem.MAX_USER_KEY, B, replace=False).astype(np.int32)
+    kv = jnp.asarray((keys * 2 + 1).astype(np.int32))
+    states = update(states, kv, jnp.asarray(keys % 97, jnp.int32))
+
+    k1 = jnp.zeros((2,), jnp.int32)
+    k2 = jnp.full((2,), sem.MAX_USER_KEY, jnp.int32)
+    out_keys, out_vals, counts, ok = rquery(states, k1, k2)
+    assert bool(ok.all())
+    # Assemble shard-major results for query 0: must equal sorted global keys.
+    got = []
+    for s in range(cfg.num_shards):
+        c = int(counts[s, 0])
+        got.extend(np.asarray(out_keys[s, 0, :c]).tolist())
+    np.testing.assert_array_equal(np.array(got), np.sort(keys))
+
+
+@NEEDS_DEVICES
+def test_dist_cleanup_local_and_transparent(setup):
+    mesh, cfg, states = setup
+    rng = np.random.default_rng(9)
+    update = make_dist_update(cfg, mesh)
+    lookup = make_dist_lookup(cfg, mesh)
+    cleanup = make_dist_cleanup(cfg, mesh)
+
+    keys = rng.choice(1000, B, replace=False).astype(np.int32)
+    states = update(states, jnp.asarray(keys * 2 + 1), jnp.asarray(keys, jnp.int32))
+    states = update(states, jnp.asarray(keys * 2 + 1), jnp.asarray(keys + 5, jnp.int32))
+    q = jnp.asarray(keys)
+    f1, v1 = lookup(states, q)
+    states = cleanup(states)
+    f2, v2 = lookup(states, q)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))

@@ -1,0 +1,115 @@
+"""Property-based tests: the LSM against a Python-dict oracle (hypothesis)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    LSMConfig,
+    lsm_init,
+    lsm_update_mixed,
+    lsm_lookup,
+    lsm_count,
+    lsm_range,
+    lsm_cleanup,
+)
+
+B = 8
+CFG = LSMConfig(batch_size=B, num_levels=4)
+KEY_SPACE = 64  # small space => lots of duplicate/delete interaction
+
+
+@st.composite
+def batches(draw):
+    """A sequence of mixed update batches with unique keys per batch."""
+    n_batches = draw(st.integers(1, 10))
+    out = []
+    for _ in range(n_batches):
+        keys = draw(
+            st.lists(st.integers(0, KEY_SPACE - 1), min_size=B, max_size=B, unique=True)
+        )
+        vals = draw(st.lists(st.integers(0, 10_000), min_size=B, max_size=B))
+        dels = draw(st.lists(st.booleans(), min_size=B, max_size=B))
+        out.append((keys, vals, dels))
+    return out
+
+
+def _apply_model(model, batch):
+    keys, vals, dels = batch
+    for k, v, d in zip(keys, vals, dels):
+        if d:
+            model.pop(k, None)
+        else:
+            model[k] = v
+    return model
+
+
+def _apply_lsm(state, batch, cleanup=False):
+    keys, vals, dels = batch
+    state = lsm_update_mixed(
+        CFG, state, jnp.array(keys), jnp.array(vals), jnp.array(dels, dtype=bool)
+    )
+    if cleanup:
+        state = lsm_cleanup(CFG, state)
+    return state
+
+
+@settings(max_examples=25, deadline=None)
+@given(batches(), st.booleans())
+def test_lookup_matches_dict_oracle(bs, do_cleanup):
+    model = {}
+    state = lsm_init(CFG)
+    for i, batch in enumerate(bs):
+        model = _apply_model(model, batch)
+        state = _apply_lsm(state, batch, cleanup=do_cleanup and i % 3 == 2)
+    assert not bool(state.overflowed)
+    queries = jnp.arange(KEY_SPACE)
+    found, vals = lsm_lookup(CFG, state, queries)
+    for k in range(KEY_SPACE):
+        if k in model:
+            assert bool(found[k]), f"key {k} missing"
+            assert int(vals[k]) == model[k], f"key {k}: {int(vals[k])} != {model[k]}"
+        else:
+            assert not bool(found[k]), f"key {k} spuriously found"
+
+
+@settings(max_examples=20, deadline=None)
+@given(batches(), st.integers(0, KEY_SPACE - 1), st.integers(0, KEY_SPACE - 1))
+def test_count_and_range_match_dict_oracle(bs, a, b):
+    k1, k2 = min(a, b), max(a, b)
+    model = {}
+    state = lsm_init(CFG)
+    for batch in bs:
+        model = _apply_model(model, batch)
+        state = _apply_lsm(state, batch)
+    expected = sorted(k for k in model if k1 <= k <= k2)
+
+    max_cand = CFG.capacity  # can never overflow
+    counts, ok = lsm_count(CFG, state, jnp.array([k1]), jnp.array([k2]), max_cand)
+    assert bool(ok[0])
+    assert int(counts[0]) == len(expected)
+
+    keys, vals, cnts, ok = lsm_range(
+        CFG, state, jnp.array([k1]), jnp.array([k2]), max_cand, KEY_SPACE
+    )
+    assert bool(ok[0]) and int(cnts[0]) == len(expected)
+    got = np.asarray(keys[0][: len(expected)])
+    np.testing.assert_array_equal(got, np.array(expected))
+    for i, k in enumerate(expected):
+        assert int(vals[0][i]) == model[k]
+
+
+@settings(max_examples=15, deadline=None)
+@given(batches())
+def test_cleanup_is_query_transparent(bs):
+    state = lsm_init(CFG)
+    for batch in bs:
+        state = _apply_lsm(state, batch)
+    cleaned = lsm_cleanup(CFG, state)
+    queries = jnp.arange(KEY_SPACE)
+    f1, v1 = lsm_lookup(CFG, state, queries)
+    f2, v2 = lsm_lookup(CFG, cleaned, queries)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    np.testing.assert_array_equal(
+        np.where(np.asarray(f1), np.asarray(v1), 0), np.where(np.asarray(f2), np.asarray(v2), 0)
+    )

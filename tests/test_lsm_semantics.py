@@ -1,0 +1,164 @@
+"""Batch-operation semantics of the LSM (paper §3.1 items 1-6, §3.4 invariants)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    LSMConfig,
+    lsm_init,
+    lsm_insert,
+    lsm_delete,
+    lsm_update_mixed,
+    lsm_bulk_build,
+    lsm_lookup,
+    lsm_count,
+    lsm_cleanup,
+    lsm_valid_count,
+    level_view,
+)
+from repro.core import semantics as sem
+
+CFG = LSMConfig(batch_size=8, num_levels=4)
+
+
+def _insert(state, keys, vals):
+    return lsm_insert(CFG, state, jnp.asarray(keys), jnp.asarray(vals))
+
+
+def test_insert_then_lookup():
+    state = lsm_init(CFG)
+    state = _insert(state, np.arange(8), np.arange(8) + 100)
+    found, vals = lsm_lookup(CFG, state, jnp.array([0, 3, 7, 42]))
+    np.testing.assert_array_equal(found, [True, True, True, False])
+    np.testing.assert_array_equal(vals[:3], [100, 103, 107])
+
+
+def test_item3_most_recent_batch_wins():
+    state = lsm_init(CFG)
+    state = _insert(state, np.arange(8), np.full(8, 1))
+    state = _insert(state, np.arange(8), np.full(8, 2))
+    found, vals = lsm_lookup(CFG, state, jnp.arange(8))
+    assert bool(found.all())
+    np.testing.assert_array_equal(vals, np.full(8, 2))
+
+
+def test_item5_delete_hides_all_older_inserts():
+    state = lsm_init(CFG)
+    state = _insert(state, np.arange(8), np.arange(8))
+    state = _insert(state, np.arange(8), np.arange(8) + 10)  # same keys again
+    state = lsm_delete(CFG, state, jnp.arange(8))
+    found, _ = lsm_lookup(CFG, state, jnp.arange(8))
+    assert not bool(found.any())
+
+
+def test_item6_insert_and_delete_same_batch_is_deleted():
+    state = lsm_init(CFG)
+    # key 5 both inserted and deleted within one batch
+    keys = np.array([5, 5, 1, 2, 3, 4, 6, 7])
+    vals = np.array([99, 0, 1, 2, 3, 4, 6, 7])
+    is_del = np.array([0, 1, 0, 0, 0, 0, 0, 0], dtype=bool)
+    state = lsm_update_mixed(CFG, state, jnp.array(keys), jnp.array(vals), jnp.array(is_del))
+    found, _ = lsm_lookup(CFG, state, jnp.array([5]))
+    assert not bool(found[0])
+    found, vals_out = lsm_lookup(CFG, state, jnp.array([1, 7]))
+    assert bool(found.all())
+    np.testing.assert_array_equal(vals_out, [1, 7])
+
+
+def test_reinsert_after_delete_is_visible():
+    state = lsm_init(CFG)
+    state = _insert(state, np.arange(8), np.arange(8))
+    state = lsm_delete(CFG, state, jnp.arange(8))
+    state = _insert(state, np.arange(8), np.arange(8) + 50)
+    found, vals = lsm_lookup(CFG, state, jnp.arange(8))
+    assert bool(found.all())
+    np.testing.assert_array_equal(vals, np.arange(8) + 50)
+
+
+def test_level_occupancy_tracks_binary_counter():
+    state = lsm_init(CFG)
+    for r in range(1, 8):
+        state = _insert(state, np.arange(8) + 100 * r, np.arange(8))
+        assert int(state.r) == r
+        for i in range(CFG.num_levels):
+            kv, _ = level_view(CFG, state, i)
+            empty = bool(jnp.all(kv == sem.PLACEBO_KV))
+            expected_full = bool((r >> i) & 1)
+            assert empty != expected_full, (r, i)
+
+
+def test_levels_are_sorted_by_original_key():
+    state = lsm_init(CFG)
+    rng = np.random.default_rng(1)
+    for r in range(7):
+        state = _insert(state, rng.choice(1000, 8, replace=False), np.arange(8))
+    for i in range(CFG.num_levels):
+        kv, _ = level_view(CFG, state, i)
+        orig = np.asarray(sem.original_key(kv))
+        assert (np.diff(orig) >= 0).all()
+
+
+def test_overflow_latches_and_preserves_state():
+    state = lsm_init(CFG)
+    for r in range(CFG.max_batches):
+        state = _insert(state, np.arange(8) + 8 * r, np.arange(8))
+    assert not bool(state.overflowed)
+    from repro.core.lsm import arena_view
+
+    before = np.asarray(arena_view(state)[0]).copy()
+    state = _insert(state, np.arange(8) + 9999, np.arange(8))
+    assert bool(state.overflowed)
+    np.testing.assert_array_equal(before, np.asarray(arena_view(state)[0]))
+    assert int(state.r) == CFG.max_batches
+
+
+def test_bulk_build_matches_incremental():
+    keys = np.arange(24) * 3
+    vals = np.arange(24)
+    st_bulk = lsm_bulk_build(CFG, jnp.array(keys), jnp.array(vals))
+    st_inc = lsm_init(CFG)
+    for i in range(3):
+        st_inc = _insert(st_inc, keys[8 * i : 8 * i + 8], vals[8 * i : 8 * i + 8])
+    q = jnp.array(list(keys) + [1, 100])
+    f1, v1 = lsm_lookup(CFG, st_bulk, q)
+    f2, v2 = lsm_lookup(CFG, st_inc, q)
+    np.testing.assert_array_equal(f1, f2)
+    np.testing.assert_array_equal(np.where(f1, v1, 0), np.where(f2, v2, 0))
+
+
+def test_cleanup_preserves_visible_set_and_shrinks():
+    state = lsm_init(CFG)
+    state = _insert(state, np.arange(8), np.arange(8))
+    state = _insert(state, np.arange(8), np.arange(8) + 10)   # duplicates
+    state = lsm_delete(CFG, state, jnp.array([0, 1, 2, 3, 100, 101, 102, 103]))
+    valid_before = int(lsm_valid_count(CFG, state))
+    assert valid_before == 4  # keys 4..7
+    cleaned = lsm_cleanup(CFG, state)
+    assert int(cleaned.r) == 1  # ceil(4/8)
+    q = jnp.arange(8)
+    f_before, v_before = lsm_lookup(CFG, state, q)
+    f_after, v_after = lsm_lookup(CFG, cleaned, q)
+    np.testing.assert_array_equal(f_before, f_after)
+    np.testing.assert_array_equal(np.where(f_before, v_before, 0), np.where(f_after, v_after, 0))
+    c, ok = lsm_count(CFG, cleaned, jnp.array([0]), jnp.array([1000]), 64)
+    assert bool(ok[0]) and int(c[0]) == 4
+
+
+def test_cleanup_of_empty_lsm():
+    state = lsm_cleanup(CFG, lsm_init(CFG))
+    assert int(state.r) == 0
+    found, _ = lsm_lookup(CFG, state, jnp.array([0]))
+    assert not bool(found[0])
+
+
+def test_update_is_jittable_and_matches_eager():
+    import functools
+
+    state = lsm_init(CFG)
+    jit_insert = jax.jit(functools.partial(lsm_insert, CFG))
+    s1 = jit_insert(state, jnp.arange(8), jnp.arange(8))
+    s2 = lsm_insert(CFG, state, jnp.arange(8), jnp.arange(8))
+    for a, b in zip(s1.key_vars, s2.key_vars):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -18,6 +18,23 @@ import jax
 import numpy as np
 
 
+def bench_dict_updates(d, key_batches, val_batches):
+    """Per-batch insert rates through the `Dictionary` facade.
+
+    Mutators consume their input handle (buffer donation), so each batch is
+    timed exactly once against the evolving dictionary — the paper's Table 2
+    protocol (rate as a function of resident batches r). Returns
+    (final_dictionary, rates_in_M_elements_per_s).
+    """
+    rates = []
+    for keys, vals in zip(key_batches, val_batches):
+        t0 = time.perf_counter()
+        d = d.insert(keys, vals)
+        jax.block_until_ready(d.state)
+        rates.append(keys.shape[0] / (time.perf_counter() - t0) / 1e6)
+    return d, rates
+
+
 def time_fn(fn, *args, warmup=2, iters=5, **kwargs):
     """Median wall-time of fn(*args) with block_until_ready, in seconds."""
     for _ in range(warmup):

@@ -1,22 +1,20 @@
 """Paper Table 2: batch insertion rates — GPU LSM vs sorted array, + cuckoo
 bulk-build rate. Protocol: insert n/b batches incrementally; record the
 per-batch rate for every resident-batch count r; report min/max/harmonic mean.
+
+Everything runs through the unified `Dictionary` facade — the facade owns the
+jit/donation plumbing the hand-rolled version carried per backend.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, hmean, time_fn
-from repro.core import LSMConfig, lsm_init, lsm_update
+from benchmarks.common import bench_dict_updates, emit, hmean, time_fn
+from repro.api import Dictionary
 from repro.core import semantics as sem
-from repro.core.cuckoo import CuckooConfig, cuckoo_build
-from repro.core.sorted_array import SAConfig, sa_init, sa_update_batch
-from repro.kernels import ops
 
 
 def run(log_n: int = 20, log_bs=(12, 14, 16)) -> None:
@@ -26,34 +24,25 @@ def run(log_n: int = 20, log_bs=(12, 14, 16)) -> None:
     for log_b in log_bs:
         b = 1 << log_b
         num_batches = n // b
-        num_levels = max(1, int(np.ceil(np.log2(num_batches + 1))))
-        cfg = LSMConfig(batch_size=b, num_levels=num_levels)
-        upd = jax.jit(functools.partial(lsm_update, cfg), donate_argnums=0)
 
-        sa_cfg = SAConfig(capacity=n)
-        sa_upd = jax.jit(functools.partial(sa_update_batch, sa_cfg), donate_argnums=0)
+        # Warm both executable caches with throwaway dictionaries.
+        warm_keys = jnp.asarray(rng.integers(0, sem.MAX_USER_KEY, b, dtype=np.int32))
+        warm_vals = jnp.zeros(b, jnp.int32)
+        for backend in ("lsm", "sorted_array"):
+            w = Dictionary.create(backend, batch_size=b, capacity=n, validate=False)
+            jax.block_until_ready(w.insert(warm_keys, warm_vals).state)
 
-        # Warm both jit caches with throwaway donated states.
-        warm_kv = jnp.asarray((rng.integers(0, sem.MAX_USER_KEY, b, dtype=np.int32) << 1) | 1)
-        warm_val = jnp.zeros(b, jnp.int32)
-        jax.block_until_ready(upd(lsm_init(cfg), warm_kv, warm_val))
-        jax.block_until_ready(sa_upd(sa_init(sa_cfg), warm_kv, warm_val))
-
-        lsm_rates, sa_rates = [], []
-        state = lsm_init(cfg)
-        sa_state = sa_init(sa_cfg)
-        import time as _time
-
-        for r in range(num_batches):
+        key_batches, val_batches = [], []
+        for _ in range(num_batches):
             keys = rng.integers(0, sem.MAX_USER_KEY, b, dtype=np.int32)
-            kv = jnp.asarray((keys.astype(np.int64) << 1 | 1).astype(np.int32))
-            vals = jnp.asarray(keys % 1009, jnp.int32)
-            t0 = _time.perf_counter()
-            state = jax.block_until_ready(upd(state, kv, vals))
-            lsm_rates.append(b / (_time.perf_counter() - t0) / 1e6)
-            t0 = _time.perf_counter()
-            sa_state = jax.block_until_ready(sa_upd(sa_state, kv, vals))
-            sa_rates.append(b / (_time.perf_counter() - t0) / 1e6)
+            key_batches.append(jnp.asarray(keys))
+            val_batches.append(jnp.asarray(keys % 1009, np.int32))
+
+        lsm = Dictionary.create("lsm", batch_size=b, capacity=n, validate=False)
+        _, lsm_rates = bench_dict_updates(lsm, key_batches, val_batches)
+        sa = Dictionary.create("sorted_array", batch_size=b, capacity=n, validate=False)
+        _, sa_rates = bench_dict_updates(sa, key_batches, val_batches)
+
         name = f"table2/insert_b2^{log_b}_n2^{log_n}"
         emit(f"{name}/lsm", b / (hmean(lsm_rates) * 1e6) if lsm_rates else 0,
              f"lsm_mean={hmean(lsm_rates):.1f}Melem/s min={min(lsm_rates):.1f} max={max(lsm_rates):.1f}")
@@ -67,20 +56,18 @@ def run(log_n: int = 20, log_bs=(12, 14, 16)) -> None:
 
     # cuckoo bulk build at 80% load (paper: 361.7 M/s on K40c)
     nk = 1 << (log_n - 2)
-    keys = rng.choice(1 << 29, nk, replace=False).astype(np.int32)
-    ccfg = CuckooConfig(table_size=int(nk / 0.8), max_rounds=100)
-    build = jax.jit(functools.partial(cuckoo_build, ccfg))
-    t = time_fn(build, jnp.asarray(keys), jnp.asarray(keys), warmup=1, iters=3)
+    nb = (n // (1 << 14) // 2) * (1 << 14)  # LSM bulk-build size (below)
+    keys = rng.choice(1 << 29, max(nk, nb), replace=False).astype(np.int32)
+    ck = Dictionary.create("cuckoo", capacity=nk, load_factor=0.8, max_rounds=100,
+                           validate=False)
+    t = time_fn(ck.bulk_build, jnp.asarray(keys[:nk]), jnp.asarray(keys[:nk]),
+                warmup=1, iters=3)
     emit("table2/cuckoo_build", t, f"{nk / t / 1e6:.1f}Melem/s")
 
     # LSM bulk build (sort + segment; paper: 727.8 M/s)
-    from repro.core import lsm_bulk_build
-
-    cfg = LSMConfig(batch_size=1 << 14, num_levels=int(np.log2(n >> 14)) + 1)
-    nb = (n // cfg.batch_size // 2) * cfg.batch_size
-    bb = jax.jit(functools.partial(lsm_bulk_build, cfg))
-    t = time_fn(bb, jnp.asarray(keys[:nb] if nb <= nk else np.resize(keys, nb)),
-                jnp.zeros(nb, jnp.int32), warmup=1, iters=3)
+    lsm = Dictionary.create("lsm", batch_size=1 << 14, capacity=n, validate=False)
+    t = time_fn(lsm.bulk_build, jnp.asarray(keys[:nb]), jnp.zeros(nb, jnp.int32),
+                warmup=1, iters=3)
     emit("table2/lsm_bulk_build", t, f"{nb / t / 1e6:.1f}Melem/s")
 
 

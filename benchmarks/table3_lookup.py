@@ -2,25 +2,21 @@
 
 Protocol: for fixed n and batch size b, build every possible LSM with
 r = 1..n/b resident batches (we sample r over the range to bound CPU time),
-issue n queries, report min/max/harmonic-mean M queries/s.
+issue n queries, report min/max/harmonic-mean M queries/s. All three
+structures run through the unified `Dictionary` facade.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, hmean, time_fn
-from repro.core import LSMConfig, lsm_bulk_build, lsm_init, lsm_insert, lsm_lookup
-from repro.core import semantics as sem
-from repro.core.cuckoo import CuckooConfig, cuckoo_build, cuckoo_lookup
-from repro.core.sorted_array import SAConfig, sa_bulk_build, sa_lookup
 
 
 def run(log_n: int = 18, log_bs=(14, 16), r_samples: int = 6) -> None:
+    from repro.api import Dictionary
+
     n = 1 << log_n
     rng = np.random.default_rng(1)
     keys = rng.choice(1 << 29, 2 * n, replace=False).astype(np.int32)
@@ -30,24 +26,20 @@ def run(log_n: int = 18, log_bs=(14, 16), r_samples: int = 6) -> None:
     for log_b in log_bs:
         b = 1 << log_b
         num_batches = n // b
-        num_levels = max(1, int(np.ceil(np.log2(num_batches + 1))))
-        cfg = LSMConfig(batch_size=b, num_levels=num_levels)
-        look = jax.jit(functools.partial(lsm_lookup, cfg))
-        ins = jax.jit(functools.partial(lsm_insert, cfg), donate_argnums=0)
+        d = Dictionary.create("lsm", batch_size=b, capacity=n, validate=False)
 
         rates = {"none": [], "all": []}
-        state = lsm_init(cfg)
         sample_rs = set(np.linspace(1, num_batches, min(r_samples, num_batches), dtype=int))
         for r in range(1, num_batches + 1):
-            state = ins(state, jnp.asarray(present[(r - 1) * b : r * b]),
-                        jnp.asarray(vals[(r - 1) * b : r * b]))
+            d = d.insert(jnp.asarray(present[(r - 1) * b : r * b]),
+                         jnp.asarray(vals[(r - 1) * b : r * b]))
             if r not in sample_rs:
                 continue
             q_all = jnp.asarray(present[rng.integers(0, r * b, n)])
             q_none = jnp.asarray(absent[:n])
-            t = time_fn(look, state, q_none, warmup=1, iters=3)
+            t = time_fn(d.lookup, q_none, warmup=1, iters=3)
             rates["none"].append(n / t / 1e6)
-            t = time_fn(look, state, q_all, warmup=1, iters=3)
+            t = time_fn(d.lookup, q_all, warmup=1, iters=3)
             rates["all"].append(n / t / 1e6)
         for kind in ("none", "all"):
             rs = rates[kind]
@@ -55,21 +47,20 @@ def run(log_n: int = 18, log_bs=(14, 16), r_samples: int = 6) -> None:
                  f"mean={hmean(rs):.1f}Mq/s min={min(rs):.1f} max={max(rs):.1f}")
 
     # SA baseline
-    sa_cfg = SAConfig(capacity=n)
-    sa = sa_bulk_build(sa_cfg, jnp.asarray(present), jnp.asarray(vals))
-    sl = jax.jit(functools.partial(sa_lookup, sa_cfg))
-    t = time_fn(sl, sa, jnp.asarray(absent[:n]), warmup=1, iters=3)
+    sa = Dictionary.create("sorted_array", capacity=n, validate=False)
+    sa = sa.bulk_build(jnp.asarray(present), jnp.asarray(vals))
+    t = time_fn(sa.lookup, jnp.asarray(absent[:n]), warmup=1, iters=3)
     emit("table3/sa_lookup_none", t / n, f"{n / t / 1e6:.1f}Mq/s")
-    t = time_fn(sl, sa, jnp.asarray(present), warmup=1, iters=3)
+    t = time_fn(sa.lookup, jnp.asarray(present), warmup=1, iters=3)
     emit("table3/sa_lookup_all", t / n, f"{n / t / 1e6:.1f}Mq/s")
 
     # cuckoo baseline (80% load)
-    ccfg = CuckooConfig(table_size=int(n / 0.8), max_rounds=100)
-    table = cuckoo_build(ccfg, jnp.asarray(present), jnp.asarray(vals))
-    cl = jax.jit(functools.partial(cuckoo_lookup, ccfg))
-    t = time_fn(cl, table, jnp.asarray(absent[:n]), warmup=1, iters=3)
+    ck = Dictionary.create("cuckoo", capacity=n, load_factor=0.8, max_rounds=100,
+                           validate=False)
+    ck = ck.bulk_build(jnp.asarray(present), jnp.asarray(vals))
+    t = time_fn(ck.lookup, jnp.asarray(absent[:n]), warmup=1, iters=3)
     emit("table3/cuckoo_lookup_none", t / n, f"{n / t / 1e6:.1f}Mq/s")
-    t = time_fn(cl, table, jnp.asarray(present), warmup=1, iters=3)
+    t = time_fn(ck.lookup, jnp.asarray(present), warmup=1, iters=3)
     emit("table3/cuckoo_lookup_all", t / n, f"{n / t / 1e6:.1f}Mq/s")
 
 

@@ -1,23 +1,22 @@
 """Paper Table 4: COUNT and RANGE query rates at expected range L=8 and
 L=1024 — LSM vs SA. Queries are (k1, k1+W) with W chosen so the expected
-number of in-range keys is L (keys uniform in [0, KEY_HI))."""
+number of in-range keys is L (keys uniform in [0, KEY_HI)). Both structures
+run through the unified `Dictionary` facade; the per-L candidate bound is an
+explicit `QueryPlan` (the paper's max_candidates knob)."""
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, hmean, time_fn
-from repro.core import LSMConfig, lsm_count, lsm_init, lsm_insert, lsm_range
-from repro.core.sorted_array import SAConfig, sa_bulk_build, sa_count, sa_range
+from benchmarks.common import emit, time_fn
 
 KEY_HI = 1 << 28
 
 
 def run(log_n: int = 16, log_bs=(12, 14), ls=(8, 1024), nq: int = 4096) -> None:
+    from repro.api import Dictionary, QueryPlan
+
     n = 1 << log_n
     rng = np.random.default_rng(2)
     keys = rng.choice(KEY_HI, n, replace=False).astype(np.int32)
@@ -26,40 +25,33 @@ def run(log_n: int = 16, log_bs=(12, 14), ls=(8, 1024), nq: int = 4096) -> None:
     for log_b in log_bs:
         b = 1 << log_b
         num_batches = n // b
-        num_levels = max(1, int(np.ceil(np.log2(num_batches + 1))))
-        cfg = LSMConfig(batch_size=b, num_levels=num_levels)
-        state = lsm_init(cfg)
-        ins = jax.jit(functools.partial(lsm_insert, cfg), donate_argnums=0)
+        d = Dictionary.create("lsm", batch_size=b, capacity=n, validate=False)
         for r in range(num_batches):
-            state = ins(state, jnp.asarray(keys[r * b : (r + 1) * b]),
-                        jnp.asarray(vals[r * b : (r + 1) * b]))
+            d = d.insert(jnp.asarray(keys[r * b : (r + 1) * b]),
+                         jnp.asarray(vals[r * b : (r + 1) * b]))
         for L in ls:
             width = int(L * KEY_HI / n)
             k1 = rng.integers(0, KEY_HI - width, nq).astype(np.int32)
             k2 = (k1 + width).astype(np.int32)
-            max_cand = max(64, 2 * L)
-            cnt = jax.jit(functools.partial(lsm_count, cfg, max_candidates=max_cand))
-            t = time_fn(cnt, state, jnp.asarray(k1), jnp.asarray(k2), warmup=1, iters=3)
+            plan = QueryPlan(max_candidates=max(64, 2 * L), max_results=max(64, 2 * L))
+            t = time_fn(d.count, jnp.asarray(k1), jnp.asarray(k2), plan,
+                        warmup=1, iters=3)
             emit(f"table4/count_b2^{log_b}_L{L}", t / nq, f"{nq / t / 1e6:.3f}Mq/s")
-            rngq = jax.jit(functools.partial(lsm_range, cfg, max_candidates=max_cand,
-                                             max_results=max_cand))
-            t = time_fn(rngq, state, jnp.asarray(k1), jnp.asarray(k2), warmup=1, iters=3)
+            t = time_fn(d.range, jnp.asarray(k1), jnp.asarray(k2), plan,
+                        warmup=1, iters=3)
             emit(f"table4/range_b2^{log_b}_L{L}", t / nq, f"{nq / t / 1e6:.3f}Mq/s")
 
     # SA baseline
-    sa_cfg = SAConfig(capacity=n)
-    sa = sa_bulk_build(sa_cfg, jnp.asarray(keys), jnp.asarray(vals))
+    sa = Dictionary.create("sorted_array", capacity=n, validate=False)
+    sa = sa.bulk_build(jnp.asarray(keys), jnp.asarray(vals))
     for L in ls:
         width = int(L * KEY_HI / n)
         k1 = rng.integers(0, KEY_HI - width, nq).astype(np.int32)
         k2 = (k1 + width).astype(np.int32)
-        max_cand = max(64, 2 * L)
-        c = jax.jit(functools.partial(sa_count, sa_cfg, max_candidates=max_cand))
-        t = time_fn(c, sa, jnp.asarray(k1), jnp.asarray(k2), warmup=1, iters=3)
+        plan = QueryPlan(max_candidates=max(64, 2 * L), max_results=max(64, 2 * L))
+        t = time_fn(sa.count, jnp.asarray(k1), jnp.asarray(k2), plan, warmup=1, iters=3)
         emit(f"table4/sa_count_L{L}", t / nq, f"{nq / t / 1e6:.3f}Mq/s")
-        r = jax.jit(functools.partial(sa_range, sa_cfg, max_candidates=max_cand,
-                                      max_results=max_cand))
-        t = time_fn(r, sa, jnp.asarray(k1), jnp.asarray(k2), warmup=1, iters=3)
+        t = time_fn(sa.range, jnp.asarray(k1), jnp.asarray(k2), plan, warmup=1, iters=3)
         emit(f"table4/sa_range_L{L}", t / nq, f"{nq / t / 1e6:.3f}Mq/s")
 
 

@@ -2,7 +2,8 @@
 inside a decode loop (assignment: the technique as a first-class feature).
 
 A tiny LM serves a stream of requests. The KV pool is paged; the logical->
-physical page index is the GPU-LSM dictionary:
+physical page index is the GPU-LSM dictionary behind the unified
+`repro.api.Dictionary` facade (the page table threads it as a pytree):
   * prefill admits pages (batch insert),
   * decode allocates a page every PAGE_SIZE tokens,
   * finished sequences are evicted (tombstone batch),
@@ -108,10 +109,11 @@ def main():
                 valid,
             )
             print(f"  evicted wave {wave-1}: free={int(table.free_count)} "
-                  f"(LSM r={int(table.lsm.r)} batches incl. tombstones)")
+                  f"(LSM r={int(table.index.state.r)} batches incl. tombstones, "
+                  f"{int(table.index.size())} live)")
 
     table = pt_compact(pt_cfg, table)
-    print(f"after CLEANUP: LSM r={int(table.lsm.r)} (tombstones purged)")
+    print(f"after CLEANUP: LSM r={int(table.index.state.r)} (tombstones purged)")
 
 
 if __name__ == "__main__":

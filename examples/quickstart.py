@@ -1,66 +1,76 @@
 """Quickstart: the GPU-LSM dictionary on TPU/JAX in 60 seconds.
 
+One `Dictionary` facade covers all three of the paper's data structures —
+no jax.jit / functools.partial / donation plumbing anywhere: the facade
+compiles and caches every op internally.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 
-import functools
-
-import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import (
-    LSMConfig,
-    lsm_cleanup,
-    lsm_count,
-    lsm_delete,
-    lsm_init,
-    lsm_insert,
-    lsm_lookup,
-    lsm_range,
-    lsm_valid_count,
-)
+from repro.api import CapabilityError, Dictionary, QueryPlan
 
 
 def main():
-    # b = 1024-element batches, 10 levels => capacity ~1M elements.
-    cfg = LSMConfig(batch_size=1024, num_levels=10)
-    state = lsm_init(cfg)
+    # LSM with ~1M-element capacity. batch_size is the paper's b; updates of
+    # ANY length are accepted (padded / split into b-sized encoded batches).
+    d = Dictionary.create("lsm", batch_size=1024, capacity=1 << 20)
+    print(d)
 
-    insert = jax.jit(functools.partial(lsm_insert, cfg), donate_argnums=0)
-    delete = jax.jit(functools.partial(lsm_delete, cfg), donate_argnums=0)
-    lookup = jax.jit(functools.partial(lsm_lookup, cfg))
-
-    # 1) batch inserts — the only way in (bulk-synchronous, sorted + merged)
-    for batch in range(4):
-        keys = jnp.arange(1024) + batch * 1024
-        state = insert(state, keys, keys * 10)
-    print(f"inserted 4 batches; resident batches r={int(state.r)} "
-          f"(levels full where bits of r are set: {int(state.r):b})")
+    # 1) inserts — any length, not just multiples of b
+    keys = jnp.arange(5000)
+    d = d.insert(keys, keys * 10)
+    print(f"inserted 5000; live size={int(d.size())} "
+          f"(resident batches r={int(d.state.r)}, bits: {int(d.state.r):b})")
 
     # 2) point lookups — most-recent value wins
-    found, vals = lookup(state, jnp.array([0, 1500, 4095, 99999]))
+    found, vals = d.lookup(jnp.array([0, 1500, 4095, 99999]))
     print("lookup [0, 1500, 4095, 99999]:", found.tolist(), vals.tolist())
 
-    # 3) overwrite: re-insert key 0 with a new value
-    state = insert(state, jnp.arange(1024), jnp.full((1024,), 777))
-    _, vals = lookup(state, jnp.array([0]))
+    # 3) overwrite: re-insert keys 0..1023 with a new value
+    d = d.insert(jnp.arange(1024), jnp.full((1024,), 777))
+    _, vals = d.lookup(jnp.array([0]))
     print("after overwrite, key 0 ->", int(vals[0]))
 
-    # 4) delete a batch (tombstones)
-    state = delete(state, jnp.arange(1024) + 1024)
-    found, _ = lookup(state, jnp.array([1500]))
+    # 4) delete (tombstones)
+    d = d.delete(jnp.arange(1024) + 1024)
+    found, _ = d.lookup(jnp.array([1500]))
     print("key 1500 after delete:", bool(found[0]))
 
-    # 5) ordered queries (hash tables can't do this)
-    counts, ok = lsm_count(cfg, state, jnp.array([0, 2048]), jnp.array([4095, 3000]), 1 << 14)
-    print(f"COUNT[0,4095]={int(counts[0])}  COUNT[2048,3000]={int(counts[1])} (exact={bool(ok.all())})")
-    keys, vals, cnt, ok = lsm_range(cfg, state, jnp.array([2040]), jnp.array([2050]), 256, 16)
-    print("RANGE[2040,2050] ->", keys[0][: int(cnt[0])].tolist())
+    # 5) ordered queries (hash tables can't do this). QueryPlan auto-sizes
+    #    the candidate tile; pass an explicit plan to override.
+    counts, ok = d.count(jnp.array([0, 2048]), jnp.array([4999, 3000]))
+    print(f"COUNT[0,4999]={int(counts[0])}  COUNT[2048,3000]={int(counts[1])} "
+          f"(exact={bool(ok.all())})")
+    rkeys, rvals, cnt, ok = d.range(2040, 2050, QueryPlan(max_results=16))
+    print("RANGE[2040,2050] ->", rkeys[0][: int(cnt[0])].tolist())
 
     # 6) cleanup: purge tombstones + duplicates, shrink levels
-    live = int(lsm_valid_count(cfg, state))
-    state = lsm_cleanup(cfg, state)
-    print(f"cleanup: {live} live elements packed into r={int(state.r)} batches")
+    before = int(d.size())
+    d = d.cleanup()
+    print(f"cleanup: {before} live elements packed into r={int(d.state.r)} batches")
+
+    # 7) same API, different backend: the sorted-array baseline. The auto
+    #    plan truncates this all-keys query (ok=False); an explicit QueryPlan
+    #    restores exactness — no silent wrong answers.
+    sa = Dictionary.create("sorted_array", capacity=1 << 13)
+    sa = sa.insert(jnp.arange(5000), jnp.arange(5000) * 10)
+    counts, ok = sa.count(0, 4999)
+    print(f"sorted_array COUNT[0,4999]={int(counts[0])} (auto plan, exact={bool(ok[0])})")
+    counts, ok = sa.count(0, 4999, QueryPlan(max_candidates=1 << 13))
+    print(f"sorted_array COUNT[0,4999]={int(counts[0])} (explicit plan, exact={bool(ok[0])})")
+
+    # 8) cuckoo: O(1) lookups, but capability flags reject ordered queries
+    ck = Dictionary.create("cuckoo", capacity=4096)
+    ck = ck.bulk_build(np.arange(4000), np.arange(4000) % 97)
+    found, _ = ck.lookup(jnp.array([17, 4001]))
+    print("cuckoo lookup [17, 4001]:", found.tolist())
+    try:
+        ck.count(0, 100)
+    except CapabilityError as e:
+        print("cuckoo COUNT ->", e)
 
 
 if __name__ == "__main__":

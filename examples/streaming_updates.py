@@ -2,39 +2,26 @@
 
 A moving-objects index (the paper's motivating use case): objects stream
 position updates (insert = overwrite), expire (delete), and a dashboard runs
-COUNT/RANGE window queries — all concurrently batched, with a cleanup policy
-that triggers when stale elements exceed a threshold.
+COUNT/RANGE window queries — all through the unified `Dictionary` facade,
+with a cleanup policy that triggers when stale elements exceed a threshold.
 
   PYTHONPATH=src python examples/streaming_updates.py
 """
 
-import functools
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    LSMConfig,
-    lsm_cleanup,
-    lsm_count,
-    lsm_init,
-    lsm_num_elements,
-    lsm_range,
-    lsm_update_mixed,
-    lsm_valid_count,
-)
+from repro.api import Dictionary, QueryPlan
 
 B = 4096
 GRID = 1 << 20          # 1M cell ids (e.g. quantized 2D positions)
 
 
 def main():
-    cfg = LSMConfig(batch_size=B, num_levels=8)
-    state = lsm_init(cfg)
-    update = jax.jit(functools.partial(lsm_update_mixed, cfg), donate_argnums=0)
-    count = jax.jit(functools.partial(lsm_count, cfg, max_candidates=1 << 14))
+    d = Dictionary.create("lsm", batch_size=B, num_levels=8)
+    plan = QueryPlan(max_candidates=1 << 14)
     rng = np.random.default_rng(0)
 
     t0 = time.perf_counter()
@@ -44,32 +31,30 @@ def main():
         keys = rng.integers(0, GRID, B).astype(np.int32)
         vals = rng.integers(0, 1 << 20, B).astype(np.int32)
         dels = rng.random(B) < 0.25
-        state = update(state, jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(dels))
+        d = d.update(jnp.asarray(keys), jnp.asarray(vals), is_delete=jnp.asarray(dels))
         n_updates += B
 
         if step % 6 == 5:
             # dashboard: occupancy of 4 map windows
             k1 = jnp.asarray([0, GRID // 4, GRID // 2, 3 * GRID // 4], jnp.int32)
             k2 = k1 + GRID // 4 - 1
-            counts, ok = count(state, k1, k2)
-            resident = int(lsm_num_elements(cfg, state))
-            live = int(lsm_valid_count(cfg, state))
+            counts, ok = d.count(k1, k2, plan)
+            resident = int(d.state.r) * B
+            live = int(d.size())
             stale_frac = 1 - live / max(resident, 1)
             print(f"step {step:2d}: windows={np.asarray(counts).tolist()} "
                   f"resident={resident} live={live} stale={stale_frac:.0%}")
             # cleanup policy: compact when >40% of the structure is stale
             if stale_frac > 0.4:
-                state = lsm_cleanup(cfg, state)
-                print(f"         cleanup -> r={int(state.r)} "
-                      f"({int(lsm_num_elements(cfg, state))} resident)")
+                d = d.cleanup()
+                print(f"         cleanup -> r={int(d.state.r)} "
+                      f"({int(d.state.r) * B} resident)")
 
     dt = time.perf_counter() - t0
     print(f"\n{n_updates} streamed updates in {dt:.1f}s "
           f"({n_updates / dt / 1e6:.2f} M updates/s on CPU; "
           f"K40c paper rate: 225 M/s)")
-    keys, vals, cnt, ok = lsm_range(
-        cfg, state, jnp.asarray([1000]), jnp.asarray([2000]), 1 << 12, 64
-    )
+    keys, vals, cnt, ok = d.range(1000, 2000, QueryPlan(max_candidates=1 << 12, max_results=64))
     print(f"RANGE[1000,2000]: {int(cnt[0])} objects, first few keys "
           f"{keys[0][:min(5, int(cnt[0]))].tolist()}")
 

@@ -1,0 +1,157 @@
+"""Backend protocol + registry for the unified `Dictionary` facade.
+
+A backend is a *static* (frozen, hashable) description of one dictionary
+implementation: it owns the functional core's config and adapts the core's
+free functions to a uniform method surface over an opaque pytree state. The
+facade keys its compiled-executable cache on the backend instance, so
+hashability is load-bearing, not a style choice.
+
+Capability flags make the paper's Table 1 machine-checkable: an op a backend
+cannot answer (cuckoo COUNT/RANGE, cuckoo incremental insert) raises
+`CapabilityError` up front with the list of backends that can — never a
+silently missing feature.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, ClassVar, Dict, Tuple, Type
+
+from repro.api.plan import QueryPlan
+
+# Backend state is an arbitrary pytree (LSMState, SAState, CuckooTable, ...).
+BackendState = Any
+
+
+class CapabilityError(NotImplementedError):
+    """An operation the chosen backend cannot support (paper Table 1)."""
+
+
+class KeyDomainError(ValueError):
+    """Keys outside [0, MAX_USER_KEY] — they would alias the placebo key or
+    flip sign under the `key << 1` status-bit encoding and silently corrupt
+    ordering (core/semantics.py)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What a backend can do. Flags mirror the paper's Table 1 columns."""
+
+    supports_updates: bool          # incremental batch insert
+    supports_deletes: bool          # incremental batch delete (tombstones)
+    supports_ordered_queries: bool  # COUNT / RANGE
+    supports_cleanup: bool          # stale-element purge
+    supports_bulk_build: bool = True
+
+
+class Backend(abc.ABC):
+    """Adapter from one functional core to the facade's uniform surface.
+
+    Implementations are frozen dataclasses; `name` and `caps` are class
+    attributes. States flow through unchanged — the facade never inspects
+    them beyond treating them as pytrees.
+    """
+
+    name: ClassVar[str]
+    caps: ClassVar[Capabilities]
+
+    # -- static geometry ----------------------------------------------------
+
+    @property
+    @abc.abstractmethod
+    def batch_size(self) -> int:
+        """Width b of one encoded update batch (facade pads/splits to this)."""
+
+    @property
+    @abc.abstractmethod
+    def capacity(self) -> int:
+        """Maximum resident encoded elements (incl. stale)."""
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    @abc.abstractmethod
+    def from_options(cls, **options) -> "Backend":
+        """Build from `Dictionary.create(...)` keyword options."""
+
+    @abc.abstractmethod
+    def init(self) -> BackendState:
+        """Empty state."""
+
+    # -- ops (jit-traceable; called under the facade's compiled cache) ------
+
+    def bulk_build(self, keys, values) -> BackendState:
+        raise CapabilityError(self._no("bulk_build"))
+
+    def update_encoded(self, state: BackendState, key_vars, values) -> BackendState:
+        """Apply one b-wide encoded batch (key-variables + values)."""
+        raise CapabilityError(self._no("update"))
+
+    @abc.abstractmethod
+    def lookup(self, state: BackendState, keys) -> Tuple[Any, Any]:
+        """Batched LOOKUP -> (found, values)."""
+
+    def count(self, state: BackendState, k1, k2, plan: QueryPlan):
+        raise CapabilityError(self._no("count"))
+
+    def range(self, state: BackendState, k1, k2, plan: QueryPlan):
+        raise CapabilityError(self._no("range"))
+
+    def cleanup(self, state: BackendState) -> BackendState:
+        raise CapabilityError(self._no("cleanup"))
+
+    @abc.abstractmethod
+    def size(self, state: BackendState):
+        """Live (visible) element count as an int32 scalar."""
+
+    @abc.abstractmethod
+    def overflowed(self, state: BackendState):
+        """bool scalar — has any update exceeded static capacity?"""
+
+    # -- diagnostics ---------------------------------------------------------
+
+    def _no(self, op: str) -> str:
+        alts = [n for n, c in _REGISTRY.items() if n != self.name and _op_supported(c, op)]
+        return (
+            f"backend {self.name!r} does not support {op!r}"
+            + (f"; use backend={alts!r}" if alts else "")
+        )
+
+
+def _op_supported(cls: Type[Backend], op: str) -> bool:
+    caps = cls.caps
+    return {
+        "update": caps.supports_updates,
+        "insert": caps.supports_updates,
+        "delete": caps.supports_deletes,
+        "count": caps.supports_ordered_queries,
+        "range": caps.supports_ordered_queries,
+        "cleanup": caps.supports_cleanup,
+        "bulk_build": caps.supports_bulk_build,
+        "lookup": True,
+    }.get(op, False)
+
+
+_REGISTRY: Dict[str, Type[Backend]] = {}
+
+
+def register_backend(cls: Type[Backend]) -> Type[Backend]:
+    """Class decorator: make a Backend reachable via Dictionary.create(name)."""
+    if not getattr(cls, "name", None):
+        raise ValueError(f"backend class {cls.__name__} must define a name")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def get_backend_class(name: str) -> Type[Backend]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

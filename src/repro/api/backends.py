@@ -1,0 +1,223 @@
+"""Built-in backends: the paper's three dictionary data structures adapted to
+the `Backend` protocol (LSM §3-4, sorted array §5.1, cuckoo hash §5.1).
+
+Each adapter is a frozen dataclass wrapping the functional core's static
+config; all array work stays in `repro.core.*` — these classes only translate
+the uniform facade surface into the core's free-function calls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+from repro.api.backend import Backend, Capabilities, register_backend
+from repro.api.plan import QueryPlan
+from repro.core import cleanup as lsm_cleanup_mod
+from repro.core import cuckoo as ck
+from repro.core import queries
+from repro.core import sorted_array as sa
+from repro.core.lsm import (
+    LSMConfig,
+    lsm_bulk_build,
+    lsm_init,
+    lsm_update,
+    level_runs,
+)
+
+
+def _levels_for(capacity: int, batch_size: int) -> int:
+    """Smallest L with b * (2^L - 1) >= capacity."""
+    batches = -(-capacity // batch_size)
+    return max(1, math.ceil(math.log2(batches + 1)))
+
+
+@register_backend
+@dataclasses.dataclass(frozen=True)
+class LSMBackend(Backend):
+    """The paper's GPU LSM: amortized O(b log r) updates, ordered queries."""
+
+    name = "lsm"
+    caps = Capabilities(
+        supports_updates=True,
+        supports_deletes=True,
+        supports_ordered_queries=True,
+        supports_cleanup=True,
+    )
+
+    cfg: LSMConfig
+
+    @classmethod
+    def from_options(cls, *, capacity=None, batch_size=None, num_levels=None, **extra):
+        if extra:
+            raise TypeError(f"unknown options for backend 'lsm': {sorted(extra)}")
+        b = int(batch_size) if batch_size is not None else 1024
+        if num_levels is None:
+            num_levels = _levels_for(int(capacity) if capacity else b * 1023, b)
+        return cls(LSMConfig(batch_size=b, num_levels=int(num_levels)))
+
+    @property
+    def batch_size(self) -> int:
+        return self.cfg.batch_size
+
+    @property
+    def capacity(self) -> int:
+        return self.cfg.capacity
+
+    def init(self):
+        return lsm_init(self.cfg)
+
+    def bulk_build(self, keys, values):
+        return lsm_bulk_build(self.cfg, keys, values)
+
+    def update_encoded(self, state, key_vars, values):
+        return lsm_update(self.cfg, state, key_vars, values)
+
+    def lookup(self, state, keys):
+        return queries.lookup_runs(level_runs(self.cfg, state), keys)
+
+    def count(self, state, k1, k2, plan: QueryPlan):
+        return queries.count_runs(level_runs(self.cfg, state), k1, k2, plan.max_candidates)
+
+    def range(self, state, k1, k2, plan: QueryPlan):
+        return queries.range_runs(
+            level_runs(self.cfg, state), k1, k2, plan.max_candidates, plan.max_results
+        )
+
+    def cleanup(self, state):
+        return lsm_cleanup_mod.lsm_cleanup(self.cfg, state)
+
+    def size(self, state):
+        return queries.valid_count_runs(level_runs(self.cfg, state))
+
+    def overflowed(self, state):
+        return state.overflowed
+
+
+@register_backend
+@dataclasses.dataclass(frozen=True)
+class SortedArrayBackend(Backend):
+    """One sorted run: O(n) per batch update (the Table 2 baseline), same
+    query semantics as the LSM via the shared run-based pipelines."""
+
+    name = "sorted_array"
+    caps = Capabilities(
+        supports_updates=True,
+        supports_deletes=True,
+        supports_ordered_queries=True,
+        supports_cleanup=True,
+    )
+
+    cfg: sa.SAConfig
+    b: int  # facade batch width; the SA core itself accepts any width
+
+    @classmethod
+    def from_options(cls, *, capacity=None, batch_size=None, **extra):
+        if extra:
+            raise TypeError(f"unknown options for backend 'sorted_array': {sorted(extra)}")
+        cap = int(capacity) if capacity is not None else 1 << 20
+        b = int(batch_size) if batch_size is not None else min(1024, cap)
+        return cls(sa.SAConfig(capacity=cap), b)
+
+    @property
+    def batch_size(self) -> int:
+        return self.b
+
+    @property
+    def capacity(self) -> int:
+        return self.cfg.capacity
+
+    def init(self):
+        return sa.sa_init(self.cfg)
+
+    def bulk_build(self, keys, values):
+        return sa.sa_bulk_build(self.cfg, keys, values)
+
+    def update_encoded(self, state, key_vars, values):
+        return sa.sa_update_batch(self.cfg, state, key_vars, values)
+
+    def _runs(self, state):
+        return [(state.key_vars, state.values)]
+
+    def lookup(self, state, keys):
+        return queries.lookup_runs(self._runs(state), keys)
+
+    def count(self, state, k1, k2, plan: QueryPlan):
+        return queries.count_runs(self._runs(state), k1, k2, plan.max_candidates)
+
+    def range(self, state, k1, k2, plan: QueryPlan):
+        return queries.range_runs(
+            self._runs(state), k1, k2, plan.max_candidates, plan.max_results
+        )
+
+    def cleanup(self, state):
+        return sa.sa_cleanup(self.cfg, state)
+
+    def size(self, state):
+        return queries.valid_count_runs(self._runs(state))
+
+    def overflowed(self, state):
+        return state.n > self.cfg.capacity
+
+
+@register_backend
+@dataclasses.dataclass(frozen=True)
+class CuckooBackend(Backend):
+    """Static cuckoo hash (CUDPP-style): O(1) lookups, bulk build only, no
+    ordered queries — the entire point of the paper's Table 1 comparison."""
+
+    name = "cuckoo"
+    caps = Capabilities(
+        supports_updates=False,
+        supports_deletes=False,
+        supports_ordered_queries=False,
+        supports_cleanup=False,
+    )
+
+    cfg: ck.CuckooConfig
+    declared_capacity: int
+
+    @classmethod
+    def from_options(
+        cls, *, capacity=None, load_factor=0.8, seed=0, max_rounds=100,
+        batch_size=None, **extra,
+    ):
+        if extra:
+            raise TypeError(f"unknown options for backend 'cuckoo': {sorted(extra)}")
+        del batch_size  # accepted for create() symmetry; meaningless here
+        cap = int(capacity) if capacity is not None else 1 << 20
+        table_size = max(int(cap / float(load_factor)), 1)
+        return cls(
+            ck.CuckooConfig(table_size=table_size, max_rounds=int(max_rounds), seed=int(seed)),
+            cap,
+        )
+
+    @property
+    def batch_size(self) -> int:
+        return 1  # no incremental updates; facade never chunks for cuckoo
+
+    @property
+    def capacity(self) -> int:
+        return self.declared_capacity
+
+    def init(self):
+        m = self.cfg.table_size
+        return ck.CuckooTable(
+            slot_keys=jnp.full((m,), ck.EMPTY, jnp.int32),
+            slot_vals=jnp.zeros((m,), jnp.int32),
+            build_ok=jnp.asarray(True),
+        )
+
+    def bulk_build(self, keys, values):
+        return ck.cuckoo_build(self.cfg, keys, values)
+
+    def lookup(self, state, keys):
+        return ck.cuckoo_lookup(self.cfg, state, keys)
+
+    def size(self, state):
+        return jnp.sum(state.slot_keys != ck.EMPTY).astype(jnp.int32)
+
+    def overflowed(self, state):
+        return ~state.build_ok

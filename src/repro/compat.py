@@ -1,0 +1,65 @@
+"""Version-compat shims for JAX APIs that moved between releases.
+
+The repo targets the current jax API surface (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.AxisType``); older runtimes (<= 0.4.x) expose the same
+functionality under ``jax.experimental.shard_map`` with ``check_rep`` and a
+``make_mesh`` without axis types. Everything that touches these APIs imports
+them from here so the rest of the codebase is version-agnostic.
+"""
+
+from __future__ import annotations
+
+import enum
+
+import jax
+
+try:  # jax >= 0.6: top-level export, `check_vma` kwarg
+    from jax import shard_map as _shard_map
+
+    _CHECK_KW = "check_vma"
+except ImportError:  # older jax: experimental module, `check_rep` kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """`jax.shard_map` with the replication-check kwarg normalized.
+
+    `check_vma` (new name) and `check_rep` (old name) gate the same
+    per-output replication verification; we accept the new name and forward
+    to whichever the runtime understands.
+    """
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **{_CHECK_KW: check_vma}
+    )
+
+
+try:  # jax >= 0.5.x
+    AxisType = jax.sharding.AxisType
+    _HAS_AXIS_TYPES = True
+except AttributeError:
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stub of jax.sharding.AxisType for runtimes that predate it."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    _HAS_AXIS_TYPES = False
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """`jax.make_mesh` that tolerates runtimes without `axis_types`.
+
+    On old jax every mesh axis is implicitly Auto, which is the only type
+    this codebase requests — dropping the argument is semantics-preserving.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and _HAS_AXIS_TYPES:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import semantics as sem
 from repro.core.lsm import LSMConfig, LSMState, _placebo, _redistribute, level_view
 from repro.kernels import ops
 
@@ -34,12 +33,10 @@ def merge_all_levels(cfg: LSMConfig, state: LSMState):
 
 
 def lsm_cleanup(cfg: LSMConfig, state: LSMState) -> LSMState:
-    merged_kv, merged_val = merge_all_levels(cfg, state)
-    orig = sem.original_key(merged_kv)
+    from repro.core.queries import survivor_mask
 
-    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), orig[:-1]])
-    first_of_segment = orig != prev
-    survives = first_of_segment & (~sem.is_tombstone(merged_kv)) & (orig != sem.PLACEBO_KEY)
+    merged_kv, merged_val = merge_all_levels(cfg, state)
+    survives = survivor_mask(merged_kv)
 
     total = jnp.sum(survives).astype(jnp.int32)
     tgt = jnp.cumsum(survives) - 1
@@ -61,8 +58,7 @@ def lsm_cleanup(cfg: LSMConfig, state: LSMState) -> LSMState:
 
 def lsm_valid_count(cfg: LSMConfig, state: LSMState):
     """Number of live (visible) elements — what cleanup would retain."""
-    merged_kv, _ = merge_all_levels(cfg, state)
-    orig = sem.original_key(merged_kv)
-    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), orig[:-1]])
-    first = orig != prev
-    return jnp.sum(first & (~sem.is_tombstone(merged_kv)) & (orig != sem.PLACEBO_KEY))
+    from repro.core.queries import valid_count_runs
+    from repro.core.lsm import level_runs
+
+    return valid_count_runs(level_runs(cfg, state))

@@ -29,8 +29,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.core import semantics as sem
 from repro.core.cleanup import lsm_cleanup

@@ -209,13 +209,16 @@ def _redistribute(cfg: LSMConfig, compact_kv, compact_val, r_new):
 
 
 def lsm_bulk_build(cfg: LSMConfig, keys, values) -> LSMState:
-    """Build from k*b unique keys: one sort + level segmentation (paper §5.2)."""
+    """Build from n unique keys: one sort + level segmentation (paper §5.2).
+
+    n need not be a multiple of b: the tail of the last resident batch is
+    placebo-padded, exactly the state CLEANUP produces for a non-multiple
+    live count.
+    """
     keys = jnp.asarray(keys, jnp.int32)
     values = jnp.asarray(values, jnp.int32)
     n = keys.shape[0]
-    if n % cfg.batch_size != 0:
-        raise ValueError("bulk build size must be a multiple of batch_size")
-    k = n // cfg.batch_size
+    k = -(-n // cfg.batch_size)  # ceil: last batch may be placebo-padded
     if k > cfg.max_batches:
         raise ValueError("bulk build exceeds configured capacity")
     kv, vals = ops.sort_pairs(sem.encode_insert(keys), values)

@@ -157,6 +157,28 @@ def range_runs(runs, k1, k2, max_candidates, max_results):
     return out_keys, out_vals, counts, ok
 
 
+def survivor_mask(key_vars):
+    """The CLEANUP survivor rule over one sorted run: an element is visible
+    iff it is the first (most recent) element of its equal-key segment, is
+    regular (not a tombstone), and is not a placebo. Single source of truth
+    for cleanup (LSM and SA) and live-size accounting."""
+    orig = sem.original_key(key_vars)
+    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), orig[:-1]])
+    return (orig != prev) & (~sem.is_tombstone(key_vars)) & (orig != sem.PLACEBO_KEY)
+
+
+def valid_count_runs(runs):
+    """Number of live (visible) elements across newest-first runs.
+
+    Shared by every run-based backend (`Dictionary.size`): stable-merge the
+    runs newest-first, then count the survivors.
+    """
+    merged_kv, merged_val = runs[0]
+    for lvl_kv, lvl_val in runs[1:]:
+        merged_kv, merged_val = ops.merge_sorted(merged_kv, merged_val, lvl_kv, lvl_val)
+    return jnp.sum(survivor_mask(merged_kv)).astype(jnp.int32)
+
+
 def lsm_count(cfg: LSMConfig, state: LSMState, k1, k2, max_candidates: int):
     return count_runs(level_runs(cfg, state), k1, k2, max_candidates)
 

@@ -67,7 +67,9 @@ def sa_update_batch(cfg: SAConfig, state: SAState, key_vars, values) -> SAState:
     # only be dropped if the caller violated the capacity precondition.
     out_kv = out_kv.at[idx_a].set(bkv, mode="drop").at[idx_c].set(state.key_vars, mode="drop")
     out_val = out_val.at[idx_a].set(bval, mode="drop").at[idx_c].set(state.values, mode="drop")
-    return SAState(out_kv, out_val, state.n + b)
+    # Placebo padding lanes (facade partial batches) are not resident elements.
+    real = jnp.sum(bkv != sem.PLACEBO_KV).astype(jnp.int32)
+    return SAState(out_kv, out_val, state.n + real)
 
 
 def sa_insert(cfg: SAConfig, state: SAState, keys, values) -> SAState:
@@ -82,6 +84,21 @@ def sa_delete(cfg: SAConfig, state: SAState, keys) -> SAState:
 
 def sa_would_overflow(cfg: SAConfig, state: SAState, batch: int):
     return state.n + batch > cfg.capacity
+
+
+def sa_cleanup(cfg: SAConfig, state: SAState) -> SAState:
+    """Purge stale elements (older duplicates, tombstones): the single-run
+    analogue of the LSM's CLEANUP — survivors compact to the front, the tail
+    refills with placebos."""
+    survives = queries.survivor_mask(state.key_vars)
+    total = jnp.sum(survives).astype(jnp.int32)
+    tgt = jnp.cumsum(survives) - 1
+    tgt = jnp.where(survives, tgt, cfg.capacity)  # out-of-range -> dropped
+    out_kv = jnp.full((cfg.capacity,), sem.PLACEBO_KV, dtype=jnp.int32)
+    out_val = jnp.full((cfg.capacity,), sem.EMPTY_VALUE, dtype=jnp.int32)
+    out_kv = out_kv.at[tgt].set(state.key_vars, mode="drop")
+    out_val = out_val.at[tgt].set(state.values, mode="drop")
+    return SAState(out_kv, out_val, total)
 
 
 def _runs(state: SAState):

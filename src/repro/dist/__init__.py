@@ -1,0 +1,3 @@
+"""Distributed-training utilities: sharding specs, fault tolerance, gradient
+compression. Everything degrades to a no-op / pure-local path off-mesh so the
+same model code runs unchanged on a laptop CPU and a multi-pod mesh."""

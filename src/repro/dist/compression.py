@@ -1,0 +1,56 @@
+"""Gradient compression for the data-parallel all-reduce: int8 quantization
+with error feedback (1-bit-Adam-family technique).
+
+Each float leaf is quantized to int8 against a per-leaf absmax scale *after*
+adding the residual carried over from the previous step; the quantization
+residual becomes the next step's carry. Error feedback turns the biased
+per-step rounding into an unbiased long-run average, so repeated compression
+of a constant gradient converges to the exact mean.
+
+The cross-device combine averages the *dequantized* tensors (scales differ
+per device, so the int8 payloads cannot be summed directly; a production
+variant would all-gather the 4-byte scales and psum the int8 payload — the
+numerics below are identical).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_float(leaf) -> bool:
+    return hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating)
+
+
+def init_error_state(tree):
+    """Zero residual for every float leaf (int leaves carry no error)."""
+    return jax.tree_util.tree_map(
+        lambda l: jnp.zeros_like(l) if _is_float(l) else jnp.zeros((), l.dtype), tree
+    )
+
+
+def compressed_tree_psum(tree, axis_name: str, error_state):
+    """Inside shard_map: mean-reduce `tree` over `axis_name` via int8 + EF.
+
+    Returns (mean_tree, new_error_state). Must be called under a mapped axis
+    named `axis_name`.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        if not _is_float(g):
+            return jax.lax.psum(g, axis_name) // n, e
+        t = g + e
+        scale = jnp.maximum(jnp.max(jnp.abs(t)), 1e-30) / 127.0
+        q = jnp.clip(jnp.round(t / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(g.dtype) * scale
+        mean = jax.lax.psum(deq, axis_name) / n
+        return mean, t - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(tree)
+    flat_e = treedef.flatten_up_to(error_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    mean_tree = jax.tree_util.tree_unflatten(treedef, [m for m, _ in out])
+    new_err = jax.tree_util.tree_unflatten(treedef, [e for _, e in out])
+    return mean_tree, new_err

@@ -1,0 +1,100 @@
+"""Fault-tolerant training: straggler detection + checkpoint/restart loop.
+
+`TrainSupervisor` wraps a step function with save-every-k checkpointing and
+restart-from-latest recovery: a step that raises is logged, the state is
+restored from the newest checkpoint, and the steps since it are replayed —
+exactly-once *effect* via idempotent replay, the standard large-job recovery
+model. `StragglerMonitor` is the per-step EMA watchdog that flags steps whose
+wall time blows past `threshold x` the running mean (slow host / degraded
+interconnect detection).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+class StragglerMonitor:
+    """EMA-based step-time watchdog.
+
+    observe(t) returns True (and counts the step) iff t exceeds
+    `threshold * ema`. Flagged steps do not update the EMA — one straggler
+    must not drag the baseline up and mask the next one.
+    """
+
+    def __init__(self, alpha: float = 0.1, threshold: float = 3.0):
+        self.alpha = float(alpha)
+        self.threshold = float(threshold)
+        self.ema: float | None = None
+        self.flagged_steps = 0
+
+    def observe(self, step_time: float) -> bool:
+        t = float(step_time)
+        if self.ema is None:
+            self.ema = t
+            return False
+        if t > self.threshold * self.ema:
+            self.flagged_steps += 1
+            return True
+        self.ema = self.alpha * t + (1.0 - self.alpha) * self.ema
+        return False
+
+
+class TrainSupervisor:
+    """Supervised training loop: run `num_steps` steps with checkpoint/restart.
+
+    step_fn(state, step) -> state may raise (node failure, preemption); the
+    supervisor restores the latest checkpoint and replays from there, up to
+    `max_restarts` times. Steps are replayed against the restored state, so a
+    deterministic step_fn yields the same final state as a failure-free run.
+    """
+
+    def __init__(self, checkpoint_manager, save_every: int = 1, max_restarts: int = 3,
+                 monitor: StragglerMonitor | None = None):
+        self.cm = checkpoint_manager
+        self.save_every = int(save_every)
+        self.max_restarts = int(max_restarts)
+        self.monitor = monitor
+        self.restarts = 0
+        self.log: list[str] = []
+
+    def _spec(self, state):
+        return jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(np.shape(l), np.asarray(l).dtype), state
+        )
+
+    def run(self, state, step_fn, num_steps: int, start_step: int = 0):
+        """Returns (final_state, completed_steps)."""
+        import time
+
+        initial = jax.tree_util.tree_map(lambda l: l, state)  # restart-from-zero copy
+        step = start_step
+        while step < num_steps:
+            try:
+                t0 = time.perf_counter()
+                state = step_fn(state, step)
+                if self.monitor is not None and self.monitor.observe(
+                    time.perf_counter() - t0
+                ):
+                    self.log.append(f"STRAGGLER at step {step}")
+                step += 1
+                if step % self.save_every == 0:
+                    self.cm.save(step, state)
+            except Exception as e:  # noqa: BLE001 — any step failure is recoverable
+                self.log.append(f"FAILURE at step {step}: {e!r}")
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    self.log.append("restart budget exhausted; re-raising")
+                    raise
+                latest = self.cm.latest_step()
+                if latest is None:
+                    state, step = initial, start_step
+                    self.log.append("RESTART from initial state (no checkpoint)")
+                else:
+                    state = self.cm.restore(latest, self._spec(state))
+                    step = latest
+                    self.log.append(f"RESTART from checkpoint step {latest}")
+        if hasattr(self.cm, "wait"):
+            self.cm.wait()  # drain any in-flight async save before reporting done
+        return state, step

@@ -2,26 +2,24 @@
 
 from __future__ import annotations
 
-import jax
+from repro.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 chips per pod; multi_pod adds a leading 2-pod axis (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_debug_mesh(data: int = 2, model: int = 2, pod: int = 0):
     """Small host-device mesh for tests (requires forced host device count)."""
     if pod:
-        return jax.make_mesh(
+        return make_mesh(
             (pod, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+            axis_types=(AxisType.Auto,) * 3,
         )
-    return jax.make_mesh(
+    return make_mesh(
         (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        axis_types=(AxisType.Auto,) * 2,
     )

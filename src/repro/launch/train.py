@@ -36,9 +36,11 @@ def best_fit_mesh():
         if n % m == 0 and m <= n:
             model = m
             break
-    return jax.make_mesh(
+    from repro.compat import AxisType, make_mesh
+
+    return make_mesh(
         (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        axis_types=(AxisType.Auto,) * 2,
     )
 
 

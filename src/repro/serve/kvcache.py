@@ -3,13 +3,14 @@
 vLLM-style paged attention needs a *mutable* mapping from logical pages
 (sequence, page_index) — or prefix hashes for RadixAttention-style reuse — to
 physical page slots. On a GPU that mapping is a host-side hash map; on TPU we
-keep it device-resident in the GPU-LSM dictionary, exercising exactly the
-paper's claim (fast batch inserts/deletes + lookups on-device):
+keep it device-resident behind the unified `Dictionary` facade (repro.api),
+exercising exactly the paper's claim (fast batch inserts/deletes + lookups
+on-device):
 
-  admission   = lsm_update with (page_key -> slot) inserts
-  eviction    = lsm_update with tombstones (slots return to the free list)
-  translation = bulk lsm_lookup (one per attention step)
-  scans       = lsm_count/lsm_range over a sequence's key range (pages of one
+  admission   = index.update with (page_key -> slot) inserts
+  eviction    = index.update with tombstones (slots return to the free list)
+  translation = bulk index.lookup (one per attention step)
+  scans       = index.count/range over a sequence's key range (pages of one
                 sequence are contiguous keys -> range queries enumerate them)
 
 Keys pack (seq_id, page_idx) into the 30-bit user key space:
@@ -20,22 +21,19 @@ enumerate them for defragmentation).
 
 The page *payload* (the actual KV bytes) lives in a separate dense pool
 [num_pages, ...]; this module manages only the index + free list, which is
-what the dictionary is for.
+what the dictionary is for. The index is a pytree (the facade registers
+`Dictionary` as a node), so PageTableState nests in jitted serving loops
+unchanged.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import semantics as sem
-from repro.core.cleanup import lsm_cleanup
-from repro.core.lsm import LSMConfig, LSMState, lsm_init, lsm_update
-from repro.core.queries import lsm_count, lsm_lookup, lsm_range
+from repro.api import Dictionary, QueryPlan
 
 MAX_PAGES_PER_SEQ = 1 << 12  # 4096 pages/sequence (x page_size tokens)
 
@@ -43,18 +41,28 @@ MAX_PAGES_PER_SEQ = 1 << 12  # 4096 pages/sequence (x page_size tokens)
 @dataclasses.dataclass(frozen=True)
 class PageTableConfig:
     num_pages: int                 # physical slots in the KV pool
-    update_batch: int = 256        # LSM batch size b (padded with placebos)
+    update_batch: int = 256        # index batch size b (padded with placebos)
     num_levels: int = 12
+    backend: str = "lsm"           # any Dictionary backend with update support
 
-    @property
-    def lsm(self) -> LSMConfig:
-        return LSMConfig(batch_size=self.update_batch, num_levels=self.num_levels)
+    def make_index(self) -> Dictionary:
+        # validate=False: keys come from page_key(), never user input, and the
+        # host-side domain check would force a device sync per translation.
+        return Dictionary.create(
+            self.backend, batch_size=self.update_batch, num_levels=self.num_levels,
+            validate=False,
+        )
 
 
 class PageTableState(NamedTuple):
-    lsm: LSMState
+    index: Dictionary              # logical page -> physical slot
     free_count: jnp.ndarray        # int32[] — free slots remaining
     free_list: jnp.ndarray         # int32[num_pages] — stack of free slot ids
+
+    @property
+    def lsm(self):
+        """Back-compat view: the raw core state behind the facade."""
+        return self.index.state
 
 
 def page_key(seq_ids, page_idxs):
@@ -64,7 +72,7 @@ def page_key(seq_ids, page_idxs):
 
 def pt_init(cfg: PageTableConfig) -> PageTableState:
     return PageTableState(
-        lsm=lsm_init(cfg.lsm),
+        index=cfg.make_index(),
         free_count=jnp.asarray(cfg.num_pages, jnp.int32),
         free_list=jnp.arange(cfg.num_pages, dtype=jnp.int32)[::-1],
     )
@@ -76,61 +84,62 @@ def pt_allocate(cfg: PageTableConfig, state: PageTableState, seq_ids, page_idxs,
     valid: bool mask (invalid lanes become placebo padding — partial batches
     per paper §4.1). Returns (state, slots) with slots[i] = -1 where invalid.
     """
-    b = cfg.update_batch
+    valid = jnp.asarray(valid, bool)
     n_alloc = jnp.sum(valid.astype(jnp.int32))
     # Pop slots from the free-list stack.
     pos = state.free_count - 1 - jnp.cumsum(valid.astype(jnp.int32)) + valid.astype(jnp.int32)
     pos = jnp.where(valid, pos, 0)
     slots = jnp.where(valid, state.free_list[jnp.clip(pos, 0, cfg.num_pages - 1)], -1)
-    keys = page_key(seq_ids, page_idxs)
-    kv = jnp.where(valid, sem.encode_insert(keys), sem.PLACEBO_KV)
-    vals = jnp.where(valid, slots, sem.EMPTY_VALUE)
-    new_lsm = lsm_update(cfg.lsm, state.lsm, kv, vals)
-    return PageTableState(new_lsm, state.free_count - n_alloc, state.free_list), slots
+    index = state.index.insert(page_key(seq_ids, page_idxs), slots, valid=valid)
+    return PageTableState(index, state.free_count - n_alloc, state.free_list), slots
 
 
 def pt_lookup(cfg: PageTableConfig, state: PageTableState, seq_ids, page_idxs):
     """Translate logical pages -> physical slots. Returns (found, slots)."""
-    return lsm_lookup(cfg.lsm, state.lsm, page_key(seq_ids, page_idxs))
+    del cfg
+    return state.index.lookup(page_key(seq_ids, page_idxs))
 
 
 def pt_evict(cfg: PageTableConfig, state: PageTableState, seq_ids, page_idxs, valid):
     """Tombstone up to `update_batch` pages and push their slots back."""
     keys = page_key(seq_ids, page_idxs)
-    found, slots = lsm_lookup(cfg.lsm, state.lsm, keys)
-    valid = valid & found
-    kv = jnp.where(valid, sem.encode_delete(keys), sem.PLACEBO_KV)
-    vals = jnp.zeros_like(kv)
-    new_lsm = lsm_update(cfg.lsm, state.lsm, kv, vals)
+    found, slots = state.index.lookup(keys)
+    valid = jnp.asarray(valid, bool) & found
+    index = state.index.delete(keys, valid=valid)
     # Push freed slots.
     n_freed = jnp.sum(valid.astype(jnp.int32))
     pos = state.free_count + jnp.cumsum(valid.astype(jnp.int32)) - 1
     pos = jnp.where(valid, pos, cfg.num_pages)  # dropped when invalid
     free_list = state.free_list.at[pos].set(jnp.where(valid, slots, -1), mode="drop")
-    return PageTableState(new_lsm, state.free_count + n_freed, free_list)
+    return PageTableState(index, state.free_count + n_freed, free_list)
 
 
 def pt_seq_page_count(cfg: PageTableConfig, state: PageTableState, seq_ids,
                       max_candidates: int = 1 << 13):
     """COUNT over a sequence's contiguous key range — live pages per sequence."""
+    del cfg
     k1 = page_key(seq_ids, jnp.zeros_like(seq_ids))
     k2 = page_key(seq_ids, jnp.full_like(seq_ids, MAX_PAGES_PER_SEQ - 1))
-    return lsm_count(cfg.lsm, state.lsm, k1, k2, max_candidates)
+    return state.index.count(k1, k2, QueryPlan(max_candidates=max_candidates))
 
 
 def pt_seq_pages(cfg: PageTableConfig, state: PageTableState, seq_ids,
                  max_pages: int, max_candidates: int = 1 << 13):
     """RANGE over a sequence's key range — enumerate its pages in order
     (defragmentation / sequence migration)."""
+    del cfg
     k1 = page_key(seq_ids, jnp.zeros_like(seq_ids))
     k2 = page_key(seq_ids, jnp.full_like(seq_ids, MAX_PAGES_PER_SEQ - 1))
-    keys, slots, counts, ok = lsm_range(
-        cfg.lsm, state.lsm, k1, k2, max_candidates, max_pages
+    keys, slots, counts, ok = state.index.range(
+        k1, k2, QueryPlan(max_candidates=max_candidates, max_results=max_pages)
     )
+    from repro.core import semantics as sem
+
     page_idx = jnp.where(keys != sem.PLACEBO_KEY, keys % MAX_PAGES_PER_SEQ, -1)
     return page_idx, slots, counts, ok
 
 
 def pt_compact(cfg: PageTableConfig, state: PageTableState) -> PageTableState:
     """Paper CLEANUP: purge tombstoned translations, shrink levels."""
-    return PageTableState(lsm_cleanup(cfg.lsm, state.lsm), state.free_count, state.free_list)
+    del cfg
+    return PageTableState(state.index.cleanup(), state.free_count, state.free_list)

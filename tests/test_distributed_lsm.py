@@ -42,8 +42,9 @@ B = 16
 def setup():
     # Function-scoped: make_dist_update donates its state argument, so every
     # test needs fresh buffers.
-    mesh = jax.make_mesh((4,), ("shard",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import AxisType, make_mesh
+
+    mesh = make_mesh((4,), ("shard",), axis_types=(AxisType.Auto,))
     cfg = DistLSMConfig(local=LSMConfig(batch_size=B, num_levels=4), num_shards=4)
     states = dist_lsm_init(cfg, mesh)
     return mesh, cfg, states

@@ -87,10 +87,11 @@ class TestCompression:
     def test_compressed_psum_matches_mean(self):
         if len(jax.devices()) < 1:
             pytest.skip("needs a device")
-        mesh = jax.make_mesh((1,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
-        from jax import shard_map
         from jax.sharding import PartitionSpec as P
 
+        from repro.compat import AxisType, make_mesh, shard_map
+
+        mesh = make_mesh((1,), ("d",), axis_types=(AxisType.Auto,))
         g = jax.random.normal(jax.random.PRNGKey(0), (64,), jnp.float32)
         tree = {"g": g}
         err = init_error_state(tree)
@@ -111,10 +112,11 @@ class TestCompression:
 
     def test_error_feedback_converges(self):
         """Repeated compression of a constant gradient averages to the truth."""
-        mesh = jax.make_mesh((1,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
-        from jax import shard_map
         from jax.sharding import PartitionSpec as P
 
+        from repro.compat import AxisType, make_mesh, shard_map
+
+        mesh = make_mesh((1,), ("d",), axis_types=(AxisType.Auto,))
         g = {"g": jnp.asarray([0.001, -1.0, 0.5, 0.3333], jnp.float32)}
         err = init_error_state(g)
         f = shard_map(lambda t, e: compressed_tree_psum(t, "d", e), mesh=mesh,

@@ -21,6 +21,7 @@ def main() -> None:
         cleanup_bench,
         fig2_effective_rate,
         kernel_bench,
+        sharded_bench,
         table2_insertion,
         table3_lookup,
         table4_count_range,
@@ -39,6 +40,9 @@ def main() -> None:
         "cleanup": lambda: cleanup_bench.run(log_n=14 if args.quick else 18,
                                              log_b=11 if args.quick else 14),
         "kernels": lambda: kernel_bench.run(log_n=16 if args.quick else 20),
+        "sharded": lambda: sharded_bench.run(log_b=10 if args.quick else 11,
+                                             num_batches=8 if args.quick else 16,
+                                             nq=512 if args.quick else 2048),
     }
     selected = args.only.split(",") if args.only else list(benches)
     print("name,us_per_call,derived")

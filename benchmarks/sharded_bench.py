@@ -1,0 +1,66 @@
+"""lsm vs lsm_sharded through the unified facade: update / lookup / count.
+
+Protocol mirrors Table 2/3 at reduced n: insert `num_batches` b-wide batches
+(facade pad/split path, donation included), then time bulk lookups and
+full-width counts. On a spoofed-CPU pool the absolute rates mean little —
+the deliverable is that the sharded backend runs the *same* benchmark body
+as the single-device LSM with zero facade changes, and the relative cost of
+the all-gather + psum combines is visible.
+
+Run with a widened pool, e.g.:
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m benchmarks.run --only sharded
+Single-device pools fall back to comparing lsm vs lsm_sharded@1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_dict_updates, emit, hmean, time_fn
+from repro.api import Dictionary, QueryPlan
+from repro.core import semantics as sem
+
+
+def run(log_b: int = 11, num_batches: int = 16, nq: int = 2048) -> None:
+    b = 1 << log_b
+    n = b * num_batches
+    shards = min(4, len(jax.devices()))
+    rng = np.random.default_rng(0)
+
+    key_batches = [
+        jnp.asarray(rng.integers(0, sem.MAX_USER_KEY, b, dtype=np.int32))
+        for _ in range(num_batches)
+    ]
+    val_batches = [jnp.asarray(np.asarray(k) % 1009, jnp.int32) for k in key_batches]
+    queries = jnp.asarray(rng.integers(0, sem.MAX_USER_KEY, nq, dtype=np.int32))
+    k1 = jnp.zeros((64,), jnp.int32)
+    k2 = jnp.full((64,), sem.MAX_USER_KEY, jnp.int32)
+    plan = QueryPlan(max_candidates=4096, max_results=64)
+
+    def backends():
+        yield "lsm", {}
+        yield f"lsm_sharded@{shards}", {"num_shards": shards}
+
+    for name, extra in backends():
+        backend = "lsm_sharded" if "@" in name else name
+        # warm the executable cache off the clock
+        w = Dictionary.create(backend, batch_size=b, capacity=n, validate=False, **extra)
+        jax.block_until_ready(w.insert(key_batches[0], val_batches[0]).state)
+
+        d = Dictionary.create(backend, batch_size=b, capacity=n, validate=False, **extra)
+        d, rates = bench_dict_updates(d, key_batches, val_batches)
+        emit(f"sharded/{name}/insert", b / (hmean(rates) * 1e6) if rates else 0,
+             f"mean={hmean(rates):.1f}Melem/s")
+
+        t = time_fn(d.lookup, queries)
+        emit(f"sharded/{name}/lookup", t, f"{nq / t / 1e6:.1f}Mq/s")
+
+        t = time_fn(d.count, k1, k2, plan)
+        emit(f"sharded/{name}/count", t, f"{64 / t / 1e3:.1f}Kq/s")
+
+
+if __name__ == "__main__":
+    run()

@@ -66,7 +66,19 @@ class Backend(abc.ABC):
     @property
     @abc.abstractmethod
     def capacity(self) -> int:
-        """Maximum resident encoded elements (incl. stale)."""
+        """Maximum resident encoded elements (incl. stale); for partitioned
+        backends, the *guaranteed* global budget (worst-case ownership skew)."""
+
+    @property
+    def num_shards(self) -> int:
+        """Device partitions behind this backend (1 = single-device).
+
+        Partitioned backends (lsm_sharded) override this; the facade's
+        pad/split update path is shard-agnostic either way — each b-wide
+        chunk reaches `update_encoded` whole, and the backend routes lanes
+        to owners itself.
+        """
+        return 1
 
     # -- construction -------------------------------------------------------
 

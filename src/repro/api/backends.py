@@ -1,9 +1,37 @@
 """Built-in backends: the paper's three dictionary data structures adapted to
-the `Backend` protocol (LSM §3-4, sorted array §5.1, cuckoo hash §5.1).
+the `Backend` protocol (LSM §3-4, sorted array §5.1, cuckoo hash §5.1), plus
+the range-partitioned multi-device LSM ("lsm_sharded").
 
 Each adapter is a frozen dataclass wrapping the functional core's static
 config; all array work stays in `repro.core.*` — these classes only translate
 the uniform facade surface into the core's free-function calls.
+
+Mesh/axis requirements (lsm_sharded)
+------------------------------------
+The sharded backend runs one full local LSM per device over a contiguous key
+range (core/distributed.py). It needs a 1-D jax mesh whose named axis (default
+``"shard"``) enumerates the shard devices:
+
+  * ``Dictionary.create("lsm_sharded", num_shards=4)`` builds the mesh itself
+    via `repro.launch.mesh.make_shard_mesh` over the first 4 visible devices
+    (`num_shards=None` → every visible device);
+  * or pass an existing mesh: ``create("lsm_sharded", mesh=m, axis="shard")``
+    — the axis must exist in ``m.axis_names`` and its size becomes the shard
+    count. Extra mesh axes are tolerated (the state is replicated over them).
+
+The mesh is static backend identity: it rides in the frozen dataclass (jax
+meshes are hashable), keys the facade's compiled-executable cache, and crosses
+jit boundaries in the treedef. `batch_size` is the *global* update width —
+every shard consumes the all-gathered batch with non-owned lanes turned into
+placebos, so the per-shard batch-of-b invariant (and the unchanged local
+binary-counter cascade) holds. `capacity` is likewise the guaranteed global
+budget: each global batch ticks every shard's resident-batch counter, so the
+per-shard arena must be able to hold every batch until a cleanup.
+
+On CPU, spoof a multi-device pool with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (before jax
+initializes) — this is how the parity tests in tests/test_backend_parity.py
+exercise 1/2/4 shards.
 """
 
 from __future__ import annotations
@@ -17,6 +45,7 @@ from repro.api.backend import Backend, Capabilities, register_backend
 from repro.api.plan import QueryPlan
 from repro.core import cleanup as lsm_cleanup_mod
 from repro.core import cuckoo as ck
+from repro.core import distributed as dist
 from repro.core import queries
 from repro.core import sorted_array as sa
 from repro.core.lsm import (
@@ -94,6 +123,107 @@ class LSMBackend(Backend):
 
     def overflowed(self, state):
         return state.overflowed
+
+
+@register_backend
+@dataclasses.dataclass(frozen=True)
+class ShardedLSMBackend(Backend):
+    """Range-partitioned LSM over a device mesh: one local LSM per shard,
+    routed by key ownership (core/distributed.py). Full capability row — the
+    distributed structure loses nothing vs the single-device LSM; ordered
+    queries stay shard-local + a psum/assembly combine.
+
+    See the module docstring for mesh/axis requirements.
+    """
+
+    name = "lsm_sharded"
+    caps = Capabilities(
+        supports_updates=True,
+        supports_deletes=True,
+        supports_ordered_queries=True,
+        supports_cleanup=True,
+    )
+
+    cfg: dist.DistLSMConfig
+    mesh: object  # jax.sharding.Mesh — hashable, static backend identity
+
+    @classmethod
+    def from_options(
+        cls, *, capacity=None, batch_size=None, num_levels=None,
+        num_shards=None, mesh=None, axis="shard", **extra,
+    ):
+        if extra:
+            raise TypeError(f"unknown options for backend 'lsm_sharded': {sorted(extra)}")
+        if mesh is None:
+            from repro.launch.mesh import make_shard_mesh
+
+            mesh = make_shard_mesh(num_shards, axis=axis)
+        if axis not in mesh.axis_names:
+            raise ValueError(
+                f"mesh has no axis {axis!r} (axes: {tuple(mesh.axis_names)})"
+            )
+        shards = int(mesh.shape[axis])
+        if num_shards is not None and int(num_shards) != shards:
+            raise ValueError(
+                f"num_shards={num_shards} disagrees with mesh axis {axis!r} "
+                f"of size {shards}"
+            )
+        b = int(batch_size) if batch_size is not None else 1024
+        if num_levels is None:
+            num_levels = _levels_for(int(capacity) if capacity else b * 1023, b)
+        return cls(
+            dist.DistLSMConfig(
+                local=LSMConfig(batch_size=b, num_levels=int(num_levels)),
+                num_shards=shards,
+                axis=axis,
+            ),
+            mesh,
+        )
+
+    @property
+    def batch_size(self) -> int:
+        return self.cfg.local.batch_size
+
+    @property
+    def capacity(self) -> int:
+        # Per-shard arena size == guaranteed global budget: every global
+        # batch ticks every shard's resident-batch counter (placebo lanes
+        # included), so one shard could end up holding all of it.
+        return self.cfg.local.capacity
+
+    @property
+    def num_shards(self) -> int:
+        return self.cfg.num_shards
+
+    def init(self):
+        return dist.dist_lsm_init(self.cfg, self.mesh)
+
+    def bulk_build(self, keys, values):
+        return dist.dist_bulk_build(self.cfg, self.mesh, keys, values)
+
+    def update_encoded(self, state, key_vars, values):
+        return dist.dist_update(self.cfg, self.mesh, state, key_vars, values)
+
+    def lookup(self, state, keys):
+        return dist.dist_lookup(self.cfg, self.mesh, state, keys)
+
+    def count(self, state, k1, k2, plan: QueryPlan):
+        return dist.dist_count(self.cfg, self.mesh, state, k1, k2, plan.max_candidates)
+
+    def range(self, state, k1, k2, plan: QueryPlan):
+        keys, vals, counts, ok = dist.dist_range(
+            self.cfg, self.mesh, state, k1, k2, plan.max_candidates, plan.max_results
+        )
+        return dist.assemble_range(keys, vals, counts, ok, plan.max_results)
+
+    def cleanup(self, state):
+        return dist.dist_cleanup(self.cfg, self.mesh, state)
+
+    def size(self, state):
+        return dist.dist_size(self.cfg, self.mesh, state)
+
+    def overflowed(self, state):
+        return jnp.any(state.overflowed)
 
 
 @register_backend

@@ -80,6 +80,12 @@ def _exec_update(backend, state, keys, values, is_delete, valid):
     later chunks are newer. (A tombstone still beats a same-chunk insert of
     its key regardless of order: the status bit orders it first — the
     paper's sorted-batch invariant 2.)
+
+    Sharded backends need no special casing here: each b-wide chunk reaches
+    `update_encoded` whole (all-gathered under shard_map), every shard keeps
+    its owned lanes and placebos the rest, so the per-shard batch-of-b
+    invariant holds and placebo padding/duplicate-recency rules are
+    preserved lane-for-lane on the owning shard.
     """
     kv = sem.encode(keys, is_delete)
     vals = jnp.where(is_delete, sem.EMPTY_VALUE, values)
@@ -192,12 +198,15 @@ class Dictionary:
 
     @classmethod
     def create(cls, backend: str = "lsm", validate: bool = True, **options) -> "Dictionary":
-        """Empty dictionary: `create("lsm"|"sorted_array"|"cuckoo", ...)`.
+        """Empty dictionary:
+        `create("lsm"|"lsm_sharded"|"sorted_array"|"cuckoo", ...)`.
 
         Common options: capacity, batch_size. Backend-specific: num_levels
-        (lsm); load_factor, seed, max_rounds (cuckoo). `validate=False`
-        skips the host-side key-domain / uniqueness checks on concrete
-        inputs (hot paths, benchmarks); capability errors always raise.
+        (lsm, lsm_sharded); num_shards, mesh, axis (lsm_sharded — see
+        repro.api.backends for mesh/axis requirements); load_factor, seed,
+        max_rounds (cuckoo). `validate=False` skips the host-side
+        key-domain / uniqueness checks on concrete inputs (hot paths,
+        benchmarks); capability errors always raise.
         """
         be = get_backend_class(backend).from_options(**options)
         return cls(be, be.init(), validate)
@@ -219,6 +228,11 @@ class Dictionary:
     @property
     def batch_size(self) -> int:
         return self._backend.batch_size
+
+    @property
+    def num_shards(self) -> int:
+        """Device partitions behind this handle (1 unless backend is sharded)."""
+        return self._backend.num_shards
 
     @property
     def state(self):

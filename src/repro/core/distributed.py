@@ -11,15 +11,30 @@ its range:
     all-gather is the TPU-native stand-in for a ragged all-to-all; bytes moved are
     identical up to the skew factor and the shapes stay static.)
   * LOOKUP: queries are broadcast; the owner answers; results combine with
-    a max-reduction using ⊥-identities (non-owners contribute 0/false).
+    a psum using ⊥-identities (non-owners contribute 0/false, exactly one
+    owner can report found, so the sum IS the owner's answer — unlike a max
+    combine this stays correct for negative payload values).
   * COUNT: local counts + psum.
-  * RANGE: local compacted results + per-shard counts; the caller assembles
-    (offsets are an exclusive psum over shard counts).
+  * RANGE: local compacted results + per-shard counts; `assemble_range`
+    turns the shard-major stack into globally compacted rows (offsets are
+    an exclusive cumsum over shard counts).
   * CLEANUP: purely shard-local (no communication at all) — a nice property
     of range partitioning the paper's structure inherits for free.
+  * SIZE / BULK_BUILD: local survivor count + psum; local build over the
+    owned subset of a replicated key set.
 
 The key space [0, MAX_USER_KEY] is split evenly; shard s owns
 [s * range_size, (s+1) * range_size).
+
+Two API layers:
+
+  * `dist_update` / `dist_lookup` / ... are *traceable*: plain functions of
+    (cfg, mesh, state, ...) that build their shard_map at trace time, so the
+    `Dictionary` facade can call them inside its own jitted executables
+    (backend "lsm_sharded" in repro.api.backends).
+  * `make_dist_*` wrap them in standalone jitted callables with donation —
+    the original surface, kept for direct core users and the distributed
+    tests.
 """
 
 from __future__ import annotations
@@ -35,9 +50,17 @@ from repro.compat import shard_map
 
 from repro.core import semantics as sem
 from repro.core.cleanup import lsm_cleanup
-from repro.core.lsm import LSMConfig, LSMState, lsm_init, lsm_update
-from repro.core.queries import count_runs, lookup_runs, range_runs
+from repro.core.lsm import (
+    LSMConfig,
+    LSMState,
+    _placebo,
+    _redistribute,
+    lsm_init,
+    lsm_update,
+)
+from repro.core.queries import count_runs, lookup_runs, range_runs, valid_count_runs
 from repro.core.lsm import level_runs
+from repro.kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,15 +78,22 @@ def owner_of(cfg: DistLSMConfig, keys):
     return jnp.clip(jnp.asarray(keys, jnp.int32) // cfg.range_size, 0, cfg.num_shards - 1)
 
 
+def shard_bounds(cfg: DistLSMConfig, shard):
+    """Inclusive [lo, hi] key range owned by `shard` (traced or static)."""
+    lo = shard * cfg.range_size
+    hi = lo + cfg.range_size - 1
+    return lo, hi
+
+
 def dist_lsm_init(cfg: DistLSMConfig, mesh) -> LSMState:
     """Per-shard LSM states, stacked on a leading sharded axis."""
+    from repro.dist.sharding import stacked_shardings
+
     def init_one(_):
         return lsm_init(cfg.local)
 
     states = jax.vmap(init_one)(jnp.arange(cfg.num_shards))
-    specs = jax.tree_util.tree_map(lambda l: P(cfg.axis, *([None] * (l.ndim - 1))), states)
-    return jax.device_put(states, jax.tree_util.tree_map(
-        lambda s: jax.sharding.NamedSharding(mesh, s), specs))
+    return jax.device_put(states, stacked_shardings(states, mesh, cfg.axis))
 
 
 def _local_state(stacked: LSMState) -> LSMState:
@@ -75,8 +105,14 @@ def _restack(state: LSMState) -> LSMState:
     return jax.tree_util.tree_map(lambda x: x[None], state)
 
 
-def make_dist_update(cfg: DistLSMConfig, mesh):
-    """Returns jitted update(states, key_vars[b], values[b]) -> states."""
+# ---------------------------------------------------------------------------
+# Traceable ops (safe to call inside an enclosing jit — the facade does)
+# ---------------------------------------------------------------------------
+
+
+def dist_update(cfg: DistLSMConfig, mesh, states, key_vars, values) -> LSMState:
+    """Apply one b-wide encoded batch: each shard keeps its keys, placebos the
+    rest, and runs the unchanged local binary-counter cascade."""
     state_spec = P(cfg.axis)
 
     def body(states, key_vars, values):
@@ -95,11 +131,11 @@ def make_dist_update(cfg: DistLSMConfig, mesh):
         out_specs=state_spec,
         check_vma=False,
     )
-    return jax.jit(f, donate_argnums=0)
+    return f(states, key_vars, values)
 
 
-def make_dist_lookup(cfg: DistLSMConfig, mesh):
-    """Returns jitted lookup(states, keys[q]) -> (found[q], values[q])."""
+def dist_lookup(cfg: DistLSMConfig, mesh, states, keys):
+    """lookup(states, keys[q]) -> (found[q], values[q])."""
     state_spec = P(cfg.axis)
 
     def body(states, keys):
@@ -109,9 +145,11 @@ def make_dist_lookup(cfg: DistLSMConfig, mesh):
         found, vals = lookup_runs(level_runs(cfg.local, st), keys)
         found = found & mine
         vals = jnp.where(found, vals, 0)
-        # ⊥-identity combine: exactly one shard can report found.
-        found = jax.lax.pmax(found.astype(jnp.int32), cfg.axis) > 0
-        vals = jax.lax.pmax(vals, cfg.axis)
+        # ⊥-identity combine: exactly one shard can report found, everyone
+        # else contributes 0, so psum reconstructs the owner's value exactly
+        # (correct even for negative payloads, unlike a max combine).
+        found = jax.lax.psum(found.astype(jnp.int32), cfg.axis) > 0
+        vals = jax.lax.psum(vals, cfg.axis)
         return found[None], vals[None]
 
     f = shard_map(
@@ -120,16 +158,12 @@ def make_dist_lookup(cfg: DistLSMConfig, mesh):
         out_specs=(P(), P()),
         check_vma=False,
     )
-
-    def run(states, keys):
-        found, vals = f(states, keys)
-        return found[0], vals[0]
-
-    return jax.jit(run)
+    found, vals = f(states, keys)
+    return found[0], vals[0]
 
 
-def make_dist_count(cfg: DistLSMConfig, mesh, max_candidates: int):
-    """Returns jitted count(states, k1[q], k2[q]) -> (counts[q], ok[q]).
+def dist_count(cfg: DistLSMConfig, mesh, states, k1, k2, max_candidates: int):
+    """count(states, k1[q], k2[q]) -> (counts[q], ok[q]).
 
     Each shard counts the intersection of [k1, k2] with its own range;
     global count = psum. Clipping to the shard range keeps per-shard
@@ -140,8 +174,7 @@ def make_dist_count(cfg: DistLSMConfig, mesh, max_candidates: int):
     def body(states, k1, k2):
         st = _local_state(states)
         shard = jax.lax.axis_index(cfg.axis).astype(jnp.int32)
-        lo = shard * cfg.range_size
-        hi = lo + cfg.range_size - 1
+        lo, hi = shard_bounds(cfg, shard)
         k1c = jnp.clip(k1, lo, hi + 1)
         k2c = jnp.clip(k2, lo - 1, hi)
         nonempty = k1c <= k2c
@@ -158,29 +191,25 @@ def make_dist_count(cfg: DistLSMConfig, mesh, max_candidates: int):
         out_specs=(P(), P()),
         check_vma=False,
     )
-
-    def run(states, k1, k2):
-        c, ok = f(states, k1, k2)
-        return c[0], ok[0]
-
-    return jax.jit(run)
+    c, ok = f(states, k1, k2)
+    return c[0], ok[0]
 
 
-def make_dist_range(cfg: DistLSMConfig, mesh, max_candidates: int, max_results: int):
-    """Returns jitted range(states, k1[q], k2[q]) ->
+def dist_range(cfg: DistLSMConfig, mesh, states, k1, k2,
+               max_candidates: int, max_results: int):
+    """range(states, k1[q], k2[q]) ->
     (keys [shards, q, max_results], vals, counts [shards, q], ok[q]).
 
     Results stay shard-major (keys within a shard ascending; shards ascending
-    = globally ascending since partitioning is by range). The caller can
-    compact with the per-shard counts.
+    = globally ascending since partitioning is by range). Use
+    `assemble_range` for globally compacted per-query rows.
     """
     state_spec = P(cfg.axis)
 
     def body(states, k1, k2):
         st = _local_state(states)
         shard = jax.lax.axis_index(cfg.axis).astype(jnp.int32)
-        lo = shard * cfg.range_size
-        hi = lo + cfg.range_size - 1
+        lo, hi = shard_bounds(cfg, shard)
         k1c = jnp.clip(k1, lo, hi + 1)
         k2c = jnp.clip(k2, lo - 1, hi)
         nonempty = (k1c <= k2c)
@@ -198,15 +227,37 @@ def make_dist_range(cfg: DistLSMConfig, mesh, max_candidates: int, max_results: 
         out_specs=(state_spec, state_spec, state_spec, P()),
         check_vma=False,
     )
-
-    def run(states, k1, k2):
-        keys, vals, counts, ok = f(states, k1, k2)
-        return keys, vals, counts, ok[0]
-
-    return jax.jit(run)
+    keys, vals, counts, ok = f(states, k1, k2)
+    return keys, vals, counts, ok[0]
 
 
-def make_dist_cleanup(cfg: DistLSMConfig, mesh):
+def assemble_range(keys, vals, counts, ok, max_results: int):
+    """Shard-major range output -> the facade's global contract.
+
+    keys/vals: [S, nq, m] per-shard compacted rows (ascending, placebo-padded
+    past counts[s, q]); counts: [S, nq] exact per-shard hit counts; ok: [nq].
+    Returns (keys [nq, max_results], vals, counts [nq], ok) with rows globally
+    ascending (shards are range-ordered) and placebo-padded past counts[q].
+    Truncation — global totals past max_results, or a shard that clipped its
+    own window — flips ok, never silently drops.
+    """
+    S, nq, m = keys.shape
+    offsets = jnp.cumsum(counts, axis=0) - counts       # exclusive, over shards
+    total = jnp.sum(counts, axis=0).astype(jnp.int32)
+    ok = ok & (total <= max_results)
+
+    j = jnp.arange(m, dtype=jnp.int32)[None, None, :]
+    valid = j < counts[:, :, None]
+    tgt = jnp.where(valid, offsets[:, :, None] + j, max_results)  # OOB -> drop
+    rows = jnp.broadcast_to(jnp.arange(nq, dtype=jnp.int32)[None, :, None], (S, nq, m))
+    out_k = jnp.full((nq, max_results), sem.PLACEBO_KEY, jnp.int32)
+    out_v = jnp.full((nq, max_results), sem.EMPTY_VALUE, jnp.int32)
+    out_k = out_k.at[rows, tgt].set(keys, mode="drop")
+    out_v = out_v.at[rows, tgt].set(vals, mode="drop")
+    return out_k, out_v, total, ok
+
+
+def dist_cleanup(cfg: DistLSMConfig, mesh, states) -> LSMState:
     """Shard-local cleanup — zero communication."""
     state_spec = P(cfg.axis)
 
@@ -215,4 +266,106 @@ def make_dist_cleanup(cfg: DistLSMConfig, mesh):
 
     f = shard_map(body, mesh=mesh, in_specs=(state_spec,), out_specs=state_spec,
                   check_vma=False)
-    return jax.jit(f, donate_argnums=0)
+    return f(states)
+
+
+def dist_size(cfg: DistLSMConfig, mesh, states):
+    """Live (visible) element count across all shards, int32 scalar.
+
+    Shards own disjoint key ranges, so per-shard survivor counts simply add —
+    no cross-shard dedup pass is ever needed.
+    """
+    state_spec = P(cfg.axis)
+
+    def body(states):
+        st = _local_state(states)
+        local = valid_count_runs(level_runs(cfg.local, st))
+        return jax.lax.psum(local, cfg.axis)
+
+    f = shard_map(body, mesh=mesh, in_specs=(state_spec,), out_specs=P(),
+                  check_vma=False)
+    return f(states)
+
+
+def dist_bulk_build(cfg: DistLSMConfig, mesh, keys, values) -> LSMState:
+    """Build from n unique keys: each shard sorts its owned subset into the
+    post-CLEANUP level layout (paper §5.2, per shard).
+
+    The key set is replicated in; non-owned lanes become placebos, which sort
+    last, so the owned prefix slices into levels exactly like a local bulk
+    build of the owned subset. The per-shard resident-batch count r is a
+    traced value (ownership skew is data-dependent), which `_redistribute`
+    supports natively.
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    values = jnp.asarray(values, jnp.int32)
+    n = keys.shape[0]
+    cap = cfg.local.capacity
+    if n > cap:
+        raise ValueError(
+            f"bulk build of {n} keys exceeds per-shard capacity {cap} "
+            "(one shard may own every key)"
+        )
+    state_spec = P(cfg.axis)
+    b = cfg.local.batch_size
+
+    def body(keys, values):
+        shard = jax.lax.axis_index(cfg.axis).astype(jnp.int32)
+        mine = owner_of(cfg, keys) == shard
+        kv = jnp.where(mine, sem.encode_insert(keys), sem.PLACEBO_KV)
+        val = jnp.where(mine, values, sem.EMPTY_VALUE)
+        kv, val = ops.sort_pairs(kv, val)
+        owned = jnp.sum(mine).astype(jnp.int32)
+        r_new = (owned + b - 1) // b
+        pk, pv = _placebo(cap - n)
+        kv = jnp.concatenate([kv, pk])
+        val = jnp.concatenate([val, pv])
+        kvs, vals = _redistribute(cfg.local, kv, val, r_new)
+        st = LSMState(
+            key_vars=kvs, values=vals, r=r_new,
+            overflowed=jnp.zeros((), dtype=bool),
+        )
+        return _restack(st)
+
+    f = shard_map(body, mesh=mesh, in_specs=(P(), P()), out_specs=state_spec,
+                  check_vma=False)
+    return f(keys, values)
+
+
+# ---------------------------------------------------------------------------
+# Standalone jitted factories (original surface; donation where mutating)
+# ---------------------------------------------------------------------------
+
+
+def make_dist_update(cfg: DistLSMConfig, mesh):
+    """Returns jitted update(states, key_vars[b], values[b]) -> states."""
+    return jax.jit(functools.partial(dist_update, cfg, mesh), donate_argnums=0)
+
+
+def make_dist_lookup(cfg: DistLSMConfig, mesh):
+    """Returns jitted lookup(states, keys[q]) -> (found[q], values[q])."""
+    return jax.jit(functools.partial(dist_lookup, cfg, mesh))
+
+
+def make_dist_count(cfg: DistLSMConfig, mesh, max_candidates: int):
+    """Returns jitted count(states, k1[q], k2[q]) -> (counts[q], ok[q])."""
+    return jax.jit(
+        functools.partial(dist_count, cfg, mesh, max_candidates=max_candidates)
+    )
+
+
+def make_dist_range(cfg: DistLSMConfig, mesh, max_candidates: int, max_results: int):
+    """Returns jitted shard-major range(states, k1[q], k2[q])."""
+    return jax.jit(functools.partial(
+        dist_range, cfg, mesh, max_candidates=max_candidates, max_results=max_results
+    ))
+
+
+def make_dist_cleanup(cfg: DistLSMConfig, mesh):
+    """Shard-local cleanup — zero communication."""
+    return jax.jit(functools.partial(dist_cleanup, cfg, mesh), donate_argnums=0)
+
+
+def make_dist_size(cfg: DistLSMConfig, mesh):
+    """Returns jitted size(states) -> int32 scalar (live elements, all shards)."""
+    return jax.jit(functools.partial(dist_size, cfg, mesh))

@@ -91,6 +91,18 @@ def replicated(mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+def stacked_shardings(tree, mesh, axis: str):
+    """NamedSharding tree splitting each leaf's leading (stacking) axis.
+
+    The distributed dictionary keeps per-shard states stacked on a leading
+    axis of size num_shards (core/distributed.py); every leaf of the state
+    pytree gets P(axis, None, ...) so shard s's slice lives on device s.
+    """
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(mesh, P(axis, *([None] * (l.ndim - 1)))), tree
+    )
+
+
 def _model_spec(shape, mesh) -> P:
     """Shard the last model-divisible dim of a >=2D leaf over "model"."""
     if "model" not in mesh.axis_names or len(shape) < 2:

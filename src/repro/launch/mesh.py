@@ -1,6 +1,15 @@
-"""Production mesh construction (assignment: MULTI-POD DRY-RUN item 1)."""
+"""Production mesh construction (assignment: MULTI-POD DRY-RUN item 1).
+
+Also owns the 1-D dictionary-shard mesh used by the `lsm_sharded` backend
+(repro.api.backends): backends never call jax.make_mesh directly — mesh
+construction and version shims stay in launch/ + repro.compat.
+"""
 
 from __future__ import annotations
+
+from typing import Optional
+
+import jax
 
 from repro.compat import AxisType, make_mesh
 
@@ -10,6 +19,32 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_shard_mesh(num_shards: Optional[int] = None, *, axis: str = "shard"):
+    """1-D mesh over the first `num_shards` devices for the sharded dictionary.
+
+    `num_shards=None` takes every visible device. On CPU the device pool can
+    be widened with XLA_FLAGS=--xla_force_host_platform_device_count=N (set
+    before jax initializes — tests/conftest.py does this for the suite).
+    """
+    devices = jax.devices()
+    if num_shards is None:
+        num_shards = len(devices)
+    num_shards = int(num_shards)
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    if num_shards > len(devices):
+        raise ValueError(
+            f"num_shards={num_shards} exceeds the {len(devices)} visible "
+            "device(s); on CPU, force more host devices with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count"
+        )
+    return make_mesh(
+        (num_shards,), (axis,),
+        axis_types=(AxisType.Auto,),
+        devices=devices[:num_shards],
+    )
 
 
 def make_debug_mesh(data: int = 2, model: int = 2, pod: int = 0):

@@ -1,12 +1,31 @@
 """Shared pytest config.
 
-The full suite compiles many hundreds of XLA CPU executables in one process;
-without releasing them the ORC JIT eventually fails with
-"INTERNAL: Failed to materialize symbols". Dropping jax's compilation caches
-between test modules keeps the resident executable count bounded.
+Two process-level concerns, both of which must run before jax initializes:
+
+* **Forced host device count.** The sharded-backend parity tests
+  (test_backend_parity.py) and the distributed-LSM tests need a multi-device
+  pool; on CPU that means --xla_force_host_platform_device_count. The flag
+  only takes effect before the jax backend comes up, and conftest is the
+  first module pytest imports, so it is set here — per-test-module guards
+  run too late (conftest's own jax import wins).
+
+* **Compilation-cache pressure.** The full suite compiles many hundreds of
+  XLA CPU executables in one process; without releasing them the ORC JIT
+  eventually fails with "INTERNAL: Failed to materialize symbols". Dropping
+  jax's compilation caches between test modules keeps the resident
+  executable count bounded.
 """
 
 import gc
+import os
+import sys
+
+if "jax" not in sys.modules and "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""
+):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=4 " + os.environ.get("XLA_FLAGS", "")
+    )
 
 import jax
 import pytest

@@ -1,0 +1,195 @@
+"""Cross-backend differential test harness for the `Dictionary` facade.
+
+One randomized op sequence (insert / delete / mixed update / cleanup, with
+duplicate keys, tombstone churn, and boundary keys at 0 / MAX_USER_KEY /
+shard boundaries) is replayed against:
+
+  * a Python-dict oracle that models the facade's documented duplicate
+    semantics *exactly* (per b-chunk: any tombstone for a key beats every
+    same-chunk insert of it; otherwise the last lane wins; later chunks are
+    newer), and
+  * every backend under test — results must match the oracle AND each other
+    bit-for-bit, including range-row placebo padding.
+
+The generator is plain numpy driven by a seeded Generator so the same
+sequences run with or without hypothesis installed;
+tests/test_backend_parity.py layers a hypothesis strategy on top of the same
+replay/check core when hypothesis is available.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.api import QueryPlan
+from repro.core import semantics as sem
+
+# Shard counts the parity suite exercises; boundary keys are derived for all
+# of them so every backend sees the same sequences.
+SHARD_COUNTS = (1, 2, 4)
+
+
+def range_size(num_shards: int) -> int:
+    """Mirror of DistLSMConfig.range_size (keys per shard, last shard ragged)."""
+    return (sem.PLACEBO_KEY + num_shards - 1) // num_shards
+
+
+def boundary_keys(shard_counts=SHARD_COUNTS):
+    """Domain edges + straddles of every shard boundary: s*rs - 1 / s*rs."""
+    ks = {0, 1, sem.MAX_USER_KEY - 1, sem.MAX_USER_KEY}
+    for num_shards in shard_counts:
+        rs = range_size(num_shards)
+        for s in range(1, num_shards):
+            for k in (s * rs - 1, s * rs):
+                if 0 <= k <= sem.MAX_USER_KEY:
+                    ks.add(k)
+    return sorted(ks)
+
+
+def key_pool(rng: np.random.Generator, extra: int = 24, shard_counts=SHARD_COUNTS):
+    """Boundary keys + a small dense cluster + scattered full-domain keys.
+
+    Small pool + sampling WITH replacement in gen_ops = heavy duplicate-key
+    and tombstone churn, which is what the paper's recency rules are about.
+    """
+    pool = set(boundary_keys(shard_counts))
+    pool |= set(int(k) for k in rng.integers(0, 2000, extra // 2))
+    pool |= set(int(k) for k in rng.integers(0, sem.MAX_USER_KEY + 1, extra - extra // 2))
+    return np.array(sorted(pool), dtype=np.int64)
+
+
+def gen_ops(rng: np.random.Generator, pool, *, n_steps=8, batch_size=8,
+            p_cleanup=0.12, p_delete=0.35, max_batches=3):
+    """Op sequence: ('update', keys, vals, dels) | ('cleanup',).
+
+    Update lengths are deliberately not multiples of batch_size (exercises
+    the facade's pad/split), keys are drawn with replacement (duplicates),
+    and values include negatives (exercises the sharded psum combine).
+    """
+    ops = []
+    for _ in range(n_steps):
+        if rng.random() < p_cleanup:
+            ops.append(("cleanup",))
+            continue
+        n = int(rng.integers(1, max_batches * batch_size))
+        keys = rng.choice(pool, n)
+        vals = rng.integers(-1000, 1000, n).astype(np.int32)
+        dels = rng.random(n) < p_delete
+        ops.append(("update", keys, vals, dels))
+    return ops
+
+
+def oracle_apply(oracle: dict, op, batch_size: int) -> None:
+    """Replay one op on the dict oracle with exact per-chunk semantics.
+
+    The facade splits a call into b-wide chunks; within a chunk the stable
+    sort makes any tombstone for key k beat every same-chunk insert of k,
+    and otherwise the last lane wins. Chunks apply oldest-first.
+    """
+    if op[0] == "cleanup":
+        return  # cleanup is semantically invisible
+    _, keys, vals, dels = op
+    keys = [int(k) for k in keys]
+    for s in range(0, len(keys), batch_size):
+        ck = keys[s:s + batch_size]
+        cv = vals[s:s + batch_size]
+        cd = dels[s:s + batch_size]
+        for k in dict.fromkeys(ck):
+            lanes = [i for i, kk in enumerate(ck) if kk == k]
+            if any(bool(cd[i]) for i in lanes):
+                oracle.pop(k, None)
+            else:
+                inserts = [i for i in lanes if not cd[i]]
+                oracle[k] = int(cv[inserts[-1]])
+
+
+def query_ranges(pool):
+    """(k1, k2) pairs: full domain, boundary straddles, narrow, empty, inverted."""
+    pool = np.asarray(pool, dtype=np.int64)
+    mid = int(pool[len(pool) // 2])
+    k1 = [0, 0, mid, int(pool[0]), sem.MAX_USER_KEY, 1000]
+    k2 = [sem.MAX_USER_KEY, mid, sem.MAX_USER_KEY, int(pool[0]), sem.MAX_USER_KEY, 0]
+    for num_shards in SHARD_COUNTS:
+        rs = range_size(num_shards)
+        for s in range(1, num_shards):
+            k1.append(max(s * rs - 1, 0))
+            k2.append(min(s * rs, sem.MAX_USER_KEY))
+    return np.array(k1, dtype=np.int64), np.array(k2, dtype=np.int64)
+
+
+def check_vs_oracle(name: str, d, oracle: dict, query_keys, k1, k2, plan: QueryPlan):
+    """Assert one backend's lookup/size/count/range answers equal the oracle."""
+    q = np.asarray(query_keys, dtype=np.int64)
+    found, vals = d.lookup(q)
+    found, vals = np.asarray(found), np.asarray(vals)
+    exp_found = np.array([int(k) in oracle for k in q])
+    np.testing.assert_array_equal(found, exp_found, err_msg=f"{name}: lookup found")
+    exp_vals = np.array([oracle.get(int(k), 0) for k in q])
+    np.testing.assert_array_equal(
+        np.where(found, vals, 0), np.where(exp_found, exp_vals, 0),
+        err_msg=f"{name}: lookup values",
+    )
+    assert int(d.size()) == len(oracle), (
+        f"{name}: size() = {int(d.size())}, oracle has {len(oracle)}"
+    )
+
+    counts, ok = d.count(k1, k2, plan)
+    counts, ok = np.asarray(counts), np.asarray(ok)
+    assert bool(ok.all()), f"{name}: count plan truncated (enlarge the test plan)"
+    exp_counts = np.array(
+        [sum(1 for k in oracle if a <= k <= b) for a, b in zip(k1.tolist(), k2.tolist())]
+    )
+    np.testing.assert_array_equal(counts, exp_counts, err_msg=f"{name}: counts")
+
+    rkeys, rvals, rcounts, rok = d.range(k1, k2, plan)
+    rkeys, rvals, rcounts = np.asarray(rkeys), np.asarray(rvals), np.asarray(rcounts)
+    assert bool(np.asarray(rok).all()), f"{name}: range plan truncated"
+    np.testing.assert_array_equal(rcounts, exp_counts, err_msg=f"{name}: range counts")
+    for i, (a, b) in enumerate(zip(k1.tolist(), k2.tolist())):
+        exp_keys = sorted(k for k in oracle if a <= k <= b)
+        got_keys = rkeys[i, : rcounts[i]].tolist()
+        assert got_keys == exp_keys, f"{name}: range[{i}] keys {got_keys} != {exp_keys}"
+        assert rvals[i, : rcounts[i]].tolist() == [oracle[k] for k in exp_keys], (
+            f"{name}: range[{i}] values"
+        )
+        # padding contract: placebo keys / empty values past counts[i]
+        assert (rkeys[i, rcounts[i]:] == sem.PLACEBO_KEY).all(), f"{name}: key padding"
+        assert (rvals[i, rcounts[i]:] == sem.EMPTY_VALUE).all(), f"{name}: value padding"
+    return rkeys, rvals, rcounts
+
+
+def run_differential(dicts: dict, ops, *, batch_size: int, plan: QueryPlan,
+                     query_keys, k1, k2, check_every: int = 1):
+    """Replay `ops` on every handle in `dicts` ({name: Dictionary}).
+
+    After each op (or every `check_every` ops, and always after the last),
+    every backend is checked against the oracle and the backends' raw range
+    outputs are checked against each other (identical arrays incl. padding).
+    Returns the final handles.
+    """
+    oracle: dict = {}
+    for step, op in enumerate(ops):
+        if op[0] == "cleanup":
+            dicts = {name: d.cleanup() for name, d in dicts.items()}
+        else:
+            _, keys, vals, dels = op
+            dicts = {
+                name: d.update(keys, vals, is_delete=dels)
+                for name, d in dicts.items()
+            }
+        oracle_apply(oracle, op, batch_size)
+
+        if step % check_every and step != len(ops) - 1:
+            continue
+        raw = {
+            name: check_vs_oracle(name, d, oracle, query_keys, k1, k2, plan)
+            for name, d in dicts.items()
+        }
+        names = sorted(raw)
+        base = names[0]
+        for other in names[1:]:
+            for a, b, what in zip(raw[base], raw[other], ("keys", "vals", "counts")):
+                np.testing.assert_array_equal(
+                    a, b, err_msg=f"range {what}: {base} vs {other}"
+                )
+    return dicts

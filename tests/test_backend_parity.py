@@ -1,0 +1,293 @@
+"""Cross-backend differential parity: lsm / sorted_array / lsm_sharded.
+
+Every backend with the full capability row must be *the same dictionary*
+behind the facade: identical lookup / size / count / range answers (down to
+range-row placebo padding) on randomized op sequences with duplicate keys,
+tombstone churn, and boundary keys at 0 / MAX_USER_KEY / shard boundaries —
+all checked against a Python-dict oracle that models the facade's chunk
+semantics exactly (tests/harness.py).
+
+The sharded backend runs at 1 / 2 / 4 shards on spoofed CPU devices
+(conftest forces --xla_force_host_platform_device_count=4 before jax
+initializes; CI additionally runs this file in a dedicated multi-device
+job). Hypothesis variants of the same harness are marked `slow` and skip
+when hypothesis is not installed.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Dictionary, QueryPlan
+from repro.core import semantics as sem
+
+from harness import (
+    boundary_keys,
+    gen_ops,
+    key_pool,
+    query_ranges,
+    range_size,
+    run_differential,
+)
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # hypothesis is a dev-only dep; the seeded tests still run
+    HAVE_HYPOTHESIS = False
+
+B = 8
+NUM_LEVELS = 6  # capacity 8 * 63 = 504 for every run-based backend
+CAPACITY = B * ((1 << NUM_LEVELS) - 1)
+PLAN = QueryPlan(max_candidates=CAPACITY, max_results=64)
+
+
+def _needs_devices(n):
+    return pytest.mark.skipif(
+        len(jax.devices()) < n, reason=f"needs {n} (forced) host devices"
+    )
+
+
+SHARD_PARAMS = [
+    pytest.param(1, id="shards1"),
+    pytest.param(2, marks=_needs_devices(2), id="shards2"),
+    pytest.param(4, marks=_needs_devices(4), id="shards4"),
+]
+
+
+def _make_backends(num_shards):
+    return {
+        "lsm": Dictionary.create("lsm", batch_size=B, num_levels=NUM_LEVELS),
+        "sorted_array": Dictionary.create(
+            "sorted_array", batch_size=B, capacity=CAPACITY
+        ),
+        f"lsm_sharded@{num_shards}": Dictionary.create(
+            "lsm_sharded", batch_size=B, num_levels=NUM_LEVELS, num_shards=num_shards
+        ),
+    }
+
+
+def _queries(pool):
+    qs = np.concatenate([pool, np.clip(pool + 1, 0, sem.MAX_USER_KEY)])
+    return np.unique(qs)
+
+
+class TestDifferentialParity:
+    @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_randomized_sequences(self, seed, num_shards):
+        rng = np.random.default_rng(seed)
+        pool = key_pool(rng)
+        ops = gen_ops(rng, pool, n_steps=8, batch_size=B)
+        k1, k2 = query_ranges(pool)
+        run_differential(
+            _make_backends(num_shards), ops,
+            batch_size=B, plan=PLAN, query_keys=_queries(pool), k1=k1, k2=k2,
+        )
+
+    @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
+    def test_boundary_key_churn(self, num_shards):
+        """Insert / delete / reinsert exactly the boundary keys, with cleanups."""
+        bks = np.array(boundary_keys(), dtype=np.int64)
+        n = len(bks)
+        ops = [
+            ("update", bks, np.arange(n, dtype=np.int32), np.zeros(n, bool)),
+            ("update", bks[::2], np.zeros((n + 1) // 2, np.int32),
+             np.ones((n + 1) // 2, bool)),                      # delete half
+            ("cleanup",),
+            ("update", bks, -np.arange(n, dtype=np.int32), np.zeros(n, bool)),
+            ("update", bks[1::2], np.zeros(n // 2, np.int32), np.ones(n // 2, bool)),
+            ("cleanup",),
+        ]
+        k1, k2 = query_ranges(bks)
+        run_differential(
+            _make_backends(num_shards), ops,
+            batch_size=B, plan=PLAN, query_keys=_queries(bks), k1=k1, k2=k2,
+        )
+
+    @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
+    def test_tombstone_churn_same_keys(self, num_shards):
+        """Insert+delete the same tiny key set repeatedly: size must track the
+        oracle through heavy stale-element accumulation and cleanup."""
+        rng = np.random.default_rng(7)
+        pool = np.array([0, 3, 5, sem.MAX_USER_KEY], dtype=np.int64)
+        ops = gen_ops(rng, pool, n_steps=10, batch_size=B,
+                      p_cleanup=0.2, p_delete=0.5, max_batches=2)
+        k1, k2 = query_ranges(pool)
+        run_differential(
+            _make_backends(num_shards), ops,
+            batch_size=B, plan=PLAN, query_keys=_queries(pool), k1=k1, k2=k2,
+        )
+
+    @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
+    def test_bulk_build_matches_incremental(self, num_shards):
+        rng = np.random.default_rng(5)
+        keys = rng.choice(sem.MAX_USER_KEY, 37, replace=False).astype(np.int64)
+        vals = (keys % 997).astype(np.int32) - 500
+        handles = _make_backends(num_shards)
+        q = _queries(np.sort(keys))
+        ref_f, ref_v = None, None
+        for name, d in handles.items():
+            built = d.bulk_build(keys, vals)
+            assert int(built.size()) == len(keys), name
+            f, v = built.lookup(q)
+            f, v = np.asarray(f), np.where(np.asarray(f), np.asarray(v), 0)
+            if ref_f is None:
+                ref_f, ref_v = f, v
+            else:
+                np.testing.assert_array_equal(f, ref_f, err_msg=name)
+                np.testing.assert_array_equal(v, ref_v, err_msg=name)
+
+
+class TestShardedQueryPlan:
+    """QueryPlan auto-sizing under sharding: per-shard windows smaller than a
+    single shard's hits must flip the ok flag, never silently truncate."""
+
+    @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
+    def test_range_overflow_on_one_hot_shard_is_flagged(self, num_shards):
+        # All keys land in shard 0's range: its per-shard window sees every hit.
+        n = 40
+        keys = np.arange(n, dtype=np.int64)
+        d = Dictionary.create(
+            "lsm_sharded", batch_size=B, num_levels=NUM_LEVELS, num_shards=num_shards
+        ).insert(keys, keys.astype(np.int32))
+        small = QueryPlan(max_candidates=CAPACITY, max_results=16)
+        rkeys, rvals, counts, ok = d.range(
+            np.array([0]), np.array([sem.MAX_USER_KEY]), small
+        )
+        assert not bool(np.asarray(ok)[0])          # flagged, not silent
+        assert int(np.asarray(counts)[0]) == n      # counts stay exact
+        big = QueryPlan(max_candidates=CAPACITY, max_results=64)
+        rkeys, _, counts, ok = d.range(np.array([0]), np.array([sem.MAX_USER_KEY]), big)
+        assert bool(np.asarray(ok)[0])
+        assert np.asarray(rkeys)[0, :n].tolist() == keys.tolist()
+
+    @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
+    def test_count_candidate_overflow_is_flagged(self, num_shards):
+        n = 40
+        keys = np.arange(n, dtype=np.int64)
+        d = Dictionary.create(
+            "lsm_sharded", batch_size=B, num_levels=NUM_LEVELS, num_shards=num_shards
+        ).insert(keys, keys.astype(np.int32))
+        counts, ok = d.count(
+            np.array([0]), np.array([sem.MAX_USER_KEY]),
+            QueryPlan(max_candidates=16),
+        )
+        assert not bool(np.asarray(ok)[0])
+        counts, ok = d.count(np.array([0]), np.array([sem.MAX_USER_KEY]), PLAN)
+        assert bool(np.asarray(ok)[0]) and int(np.asarray(counts)[0]) == n
+
+    @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
+    def test_auto_plan_stays_exact_for_small_sharded_dicts(self, num_shards):
+        # No explicit plan: resolved() sees the (per-shard == global) capacity
+        # <= 4096, so auto-sizing must stay exact and ok must hold.
+        keys = np.arange(50, dtype=np.int64) * range_size(4)  # spread over shards
+        keys = np.unique(np.clip(keys, 0, sem.MAX_USER_KEY))
+        d = Dictionary.create(
+            "lsm_sharded", batch_size=B, num_levels=NUM_LEVELS, num_shards=num_shards
+        ).insert(keys, np.ones(len(keys), np.int32))
+        counts, ok = d.count(np.array([0]), np.array([sem.MAX_USER_KEY]))
+        assert bool(np.asarray(ok)[0]) and int(np.asarray(counts)[0]) == len(keys)
+
+
+class TestShardedFacadeMechanics:
+    @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
+    def test_num_shards_and_repr(self, num_shards):
+        d = Dictionary.create(
+            "lsm_sharded", batch_size=B, num_levels=3, num_shards=num_shards
+        )
+        assert d.num_shards == num_shards
+        assert d.backend == "lsm_sharded"
+        assert Dictionary.create("lsm", batch_size=B, num_levels=3).num_shards == 1
+
+    @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
+    def test_pytree_roundtrip(self, num_shards):
+        import jax.tree_util as jtu
+
+        d = Dictionary.create(
+            "lsm_sharded", batch_size=B, num_levels=3, num_shards=num_shards
+        ).insert(np.array([4, 5]), np.array([40, 50]))
+        leaves, treedef = jtu.tree_flatten(d)
+        d2 = jtu.tree_unflatten(treedef, leaves)
+        f, v = d2.lookup(np.array([4, 5]))
+        assert np.asarray(f).tolist() == [True, True]
+        assert np.asarray(v).tolist() == [40, 50]
+
+    def test_mesh_option_roundtrip_and_validation(self):
+        from repro.launch.mesh import make_shard_mesh
+
+        mesh = make_shard_mesh(1)
+        d = Dictionary.create("lsm_sharded", batch_size=B, num_levels=3, mesh=mesh)
+        assert d.num_shards == 1
+        with pytest.raises(ValueError, match="no axis"):
+            Dictionary.create("lsm_sharded", batch_size=B, num_levels=3,
+                              mesh=mesh, axis="nope")
+        with pytest.raises(ValueError, match="disagrees"):
+            Dictionary.create("lsm_sharded", batch_size=B, num_levels=3,
+                              mesh=mesh, num_shards=2)
+        with pytest.raises(ValueError, match="num_shards"):
+            Dictionary.create("lsm_sharded", batch_size=B, num_levels=3,
+                              num_shards=len(jax.devices()) + 1)
+
+    @_needs_devices(4)
+    def test_overflow_latches_across_shards(self):
+        d = Dictionary.create("lsm_sharded", batch_size=4, num_levels=1, num_shards=4)
+        d = d.insert(np.array([1, 2, 3, 4]), np.zeros(4, np.int32))
+        assert not bool(d.overflowed())
+        d = d.insert(np.array([5, 6, 7, 8]), np.zeros(4, np.int32))
+        assert bool(d.overflowed())  # every shard's counter ticked past max
+
+    def test_bulk_build_capacity_check(self):
+        d = Dictionary.create("lsm_sharded", batch_size=4, num_levels=1, num_shards=1)
+        keys = np.arange(5, dtype=np.int64)
+        with pytest.raises(ValueError, match="capacity"):
+            d.bulk_build(keys, keys.astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-driven variants (same harness core, generated op sequences)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _POOL = np.array(boundary_keys() + [2, 40, 1000, 77777], dtype=np.int64)
+
+    @st.composite
+    def op_sequences(draw):
+        n_steps = draw(st.integers(1, 6))
+        ops = []
+        for _ in range(n_steps):
+            if draw(st.integers(0, 7)) == 0:
+                ops.append(("cleanup",))
+                continue
+            n = draw(st.integers(1, 3 * B))
+            idx = draw(st.lists(st.integers(0, len(_POOL) - 1),
+                                min_size=n, max_size=n))
+            vals = draw(st.lists(st.integers(-1000, 1000), min_size=n, max_size=n))
+            dels = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+            ops.append((
+                "update",
+                _POOL[np.array(idx)],
+                np.array(vals, np.int32),
+                np.array(dels, bool),
+            ))
+        return ops
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestHypothesisParity:
+    @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
+    def test_generated_sequences(self, num_shards):
+        @settings(max_examples=15, deadline=None,
+                  suppress_health_check=[HealthCheck.too_slow])
+        @given(ops=op_sequences())
+        def run(ops):
+            k1, k2 = query_ranges(_POOL)
+            run_differential(
+                _make_backends(num_shards), ops,
+                batch_size=B, plan=PLAN, query_keys=_queries(_POOL),
+                k1=k1, k2=k2, check_every=2,
+            )
+
+        run()

@@ -131,7 +131,9 @@ class TestBackendParity:
 
 class TestCapabilities:
     def test_registry_lists_builtins(self):
-        assert set(available_backends()) >= {"lsm", "sorted_array", "cuckoo"}
+        assert set(available_backends()) >= {
+            "lsm", "lsm_sharded", "sorted_array", "cuckoo",
+        }
 
     def test_cuckoo_lookup_works_but_ordered_queries_raise(self):
         keys = np.arange(50, dtype=np.int32)
@@ -152,6 +154,30 @@ class TestCapabilities:
         ck = Dictionary.create("cuckoo", capacity=16)
         with pytest.raises(CapabilityError, match="lsm"):
             ck.count(0, 1)
+
+    def test_capability_errors_name_lsm_sharded_as_alternative(self):
+        """The sharded backend has the full capability row, so every
+        cuckoo-style unsupported-op error must list it among the backends
+        that can (paper Table 1, now with four columns)."""
+        ck = Dictionary.create("cuckoo", capacity=16)
+        ops = [
+            lambda: ck.count(0, 1),
+            lambda: ck.range(0, 1),
+            lambda: ck.cleanup(),
+            lambda: ck.insert(np.asarray([1]), np.asarray([1])),
+            lambda: ck.delete(np.asarray([1])),
+        ]
+        for op in ops:
+            with pytest.raises(CapabilityError, match="lsm_sharded"):
+                op()
+
+    def test_lsm_sharded_capability_row_is_full(self):
+        from repro.api import get_backend_class
+
+        caps = get_backend_class("lsm_sharded").caps
+        assert caps.supports_updates and caps.supports_deletes
+        assert caps.supports_ordered_queries and caps.supports_cleanup
+        assert caps.supports_bulk_build
 
     def test_unknown_backend_raises(self):
         with pytest.raises(KeyError, match="unknown backend"):

@@ -1,18 +1,9 @@
 """Distributed (range-partitioned, shard_map) LSM vs the single-device LSM.
 
-Runs with 4 forced host devices — requires its own process so the forced
-device count is set before jax initializes (see conftest: this file must not
-import jax at module scope before the env var)."""
-
-import os
-import sys
-
-# Force 4 CPU devices BEFORE jax initializes. pytest imports this module in
-# the main process; guard so the flag only applies when jax is not yet live.
-if "jax" not in sys.modules:
-    os.environ["XLA_FLAGS"] = (
-        "--xla_force_host_platform_device_count=4 " + os.environ.get("XLA_FLAGS", "")
-    )
+Runs with 4 forced host devices — tests/conftest.py sets
+--xla_force_host_platform_device_count=4 before jax initializes (a
+per-test-module guard runs too late: conftest's own jax import wins).
+The owner_of partitioning tests are pure config math and need no devices."""
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +19,10 @@ from repro.core.distributed import (
     make_dist_count,
     make_dist_lookup,
     make_dist_range,
+    make_dist_size,
     make_dist_update,
+    owner_of,
+    shard_bounds,
 )
 
 NEEDS_DEVICES = pytest.mark.skipif(
@@ -36,6 +30,66 @@ NEEDS_DEVICES = pytest.mark.skipif(
 )
 
 B = 16
+
+
+class TestOwnerOf:
+    """Regression coverage for DistLSMConfig.range_size edge cases: keys at
+    MAX_USER_KEY and keys straddling s*range_size - 1 / s*range_size must
+    land on exactly one owner, for even and ragged partitions alike."""
+
+    @staticmethod
+    def _reference_owner(cfg, keys):
+        """Modulo-free reference: the owner of k is the number of shard
+        boundaries at or below it."""
+        owner = np.zeros(len(keys), dtype=np.int64)
+        for s in range(1, cfg.num_shards):
+            owner += keys >= s * cfg.range_size
+        return owner
+
+    @staticmethod
+    def _fuzz_keys(cfg, rng, n_random=512):
+        keys = {0, 1, sem.MAX_USER_KEY - 1, sem.MAX_USER_KEY}
+        for s in range(1, cfg.num_shards + 1):
+            for d in (-1, 0, 1):
+                k = s * cfg.range_size + d
+                if 0 <= k <= sem.MAX_USER_KEY:
+                    keys.add(k)
+        keys |= {int(k) for k in rng.integers(0, sem.MAX_USER_KEY + 1, n_random)}
+        return np.array(sorted(keys), dtype=np.int64)
+
+    @pytest.mark.parametrize("num_shards", [1, 2, 3, 4, 5, 7, 8])
+    def test_owner_matches_modulo_free_reference(self, num_shards):
+        cfg = DistLSMConfig(local=LSMConfig(batch_size=8, num_levels=2),
+                            num_shards=num_shards)
+        keys = self._fuzz_keys(cfg, np.random.default_rng(num_shards))
+        got = np.asarray(owner_of(cfg, keys))
+        np.testing.assert_array_equal(got, self._reference_owner(cfg, keys))
+        assert got.min() >= 0 and got.max() <= num_shards - 1
+
+    @pytest.mark.parametrize("num_shards", [1, 2, 3, 4, 5, 7, 8])
+    def test_every_key_covered_by_exactly_one_shard_interval(self, num_shards):
+        """The [lo, hi] windows the COUNT/RANGE clipping uses (shard_bounds)
+        must tile the key domain: each key inside exactly one window, and
+        that window's shard must equal owner_of."""
+        cfg = DistLSMConfig(local=LSMConfig(batch_size=8, num_levels=2),
+                            num_shards=num_shards)
+        keys = self._fuzz_keys(cfg, np.random.default_rng(100 + num_shards))
+        lows, highs = zip(*(shard_bounds(cfg, s) for s in range(num_shards)))
+        lows, highs = np.array(lows), np.array(highs)
+        inside = (keys[:, None] >= lows[None, :]) & (keys[:, None] <= highs[None, :])
+        np.testing.assert_array_equal(inside.sum(axis=1), np.ones(len(keys)))
+        np.testing.assert_array_equal(
+            np.argmax(inside, axis=1), np.asarray(owner_of(cfg, keys))
+        )
+
+    def test_max_user_key_owned_by_last_shard_window(self):
+        for num_shards in (1, 2, 4, 6):
+            cfg = DistLSMConfig(local=LSMConfig(batch_size=8, num_levels=2),
+                                num_shards=num_shards)
+            lo, hi = shard_bounds(cfg, num_shards - 1)
+            assert lo <= sem.MAX_USER_KEY <= hi
+            owner = int(np.asarray(owner_of(cfg, np.array([sem.MAX_USER_KEY])))[0])
+            assert owner == num_shards - 1
 
 
 @pytest.fixture()
@@ -110,6 +164,19 @@ def test_dist_range_is_globally_sorted(setup):
         c = int(counts[s, 0])
         got.extend(np.asarray(out_keys[s, 0, :c]).tolist())
     np.testing.assert_array_equal(np.array(got), np.sort(keys))
+
+
+@NEEDS_DEVICES
+def test_dist_size_counts_live_elements_across_shards(setup):
+    mesh, cfg, states = setup
+    update = make_dist_update(cfg, mesh)
+    size = make_dist_size(cfg, mesh)
+    assert int(size(states)) == 0
+    keys = np.arange(B, dtype=np.int32) * 60_000_000  # spans all 4 shard ranges
+    states = update(states, jnp.asarray(keys * 2 + 1), jnp.asarray(keys % 97))
+    assert int(size(states)) == B
+    states = update(states, jnp.asarray(keys * 2), jnp.zeros(B, jnp.int32))  # tombstones
+    assert int(size(states)) == 0
 
 
 @NEEDS_DEVICES

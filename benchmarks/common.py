@@ -1,7 +1,12 @@
-"""Benchmark utilities: wall-clock timing of jitted callables + CSV emission.
+"""Benchmark utilities: wall-clock timing of jitted callables + CSV/JSON
+emission.
 
-Output convention (assignment): ``name,us_per_call,derived`` where `derived`
-is the paper's headline unit for that table (M elements/s or M queries/s).
+Output convention (assignment): ``name,us_per_call,derived`` CSV rows where
+`derived` is the paper's headline unit for that table (M elements/s or M
+queries/s). In addition, every `emit` inside a `begin_suite`/`end_suite`
+window is recorded and written as machine-readable ``BENCH_<suite>.json``
+(rows + config + schema version) so successive PRs have a perf trajectory
+to diff instead of scraping stdout.
 
 Scaling note: the paper's Tesla K40c tables use n=2^27 elements; this CPU
 container runs the same experiment *protocols* at reduced n (scales recorded
@@ -12,10 +17,52 @@ discusses the mapping.
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import numpy as np
+
+# Active JSON recorder (one suite at a time; run.py drives the lifecycle).
+_RECORD = {"suite": None, "config": {}, "rows": []}
+
+
+def begin_suite(name: str, **config) -> None:
+    """Start recording emit() rows for BENCH_<name>.json."""
+    _RECORD["suite"] = name
+    _RECORD["config"] = dict(config)
+    _RECORD["rows"] = []
+
+
+def end_suite(out_dir: str = ".") -> str:
+    """Write BENCH_<suite>.json and stop recording. Returns the path."""
+    if _RECORD["suite"] is None:
+        raise RuntimeError("end_suite() without begin_suite()")
+    payload = {
+        "schema": 1,
+        "suite": _RECORD["suite"],
+        "backend": jax.default_backend(),
+        "config": _RECORD["config"],
+        "rows": _RECORD["rows"],
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{_RECORD['suite']}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    _RECORD["suite"] = None
+    _RECORD["config"] = {}
+    _RECORD["rows"] = []
+    return path
+
+
+def abort_suite() -> None:
+    """Discard the active recording (a bench raised) without writing JSON."""
+    _RECORD["suite"] = None
+    _RECORD["config"] = {}
+    _RECORD["rows"] = []
 
 
 def bench_dict_updates(d, key_batches, val_batches):
@@ -51,6 +98,10 @@ def time_fn(fn, *args, warmup=2, iters=5, **kwargs):
 
 def emit(name: str, seconds: float, derived: str):
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+    if _RECORD["suite"] is not None:
+        _RECORD["rows"].append(
+            {"name": name, "us_per_call": round(seconds * 1e6, 3), "derived": derived}
+        )
 
 
 def hmean(xs):

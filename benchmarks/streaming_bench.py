@@ -1,0 +1,95 @@
+"""Streaming sub-batch update benchmark: the write-buffer ("level −1") path.
+
+Serving workloads trickle in ragged sub-batches, not b-aligned batches. This
+suite measures what the staging buffer buys over the old pad-every-call
+facade policy:
+
+  1. sub-batch insert *rate* for sizes s << b (each call stages s lanes and
+     flushes at most once per b staged elements, vs. one full placebo-padded
+     cascade per call before);
+  2. live-capacity *consumption*: N size-s updates must consume
+     floor(N*s/b) batch slots (ceil after a flush), not N — so the
+     capacity-overflow point for size-1 inserts improves ~b×. Both the slot
+     count and the measured overflow point are asserted, not just printed.
+
+Emits CSV rows like every other suite and records them for
+BENCH_streaming.json (benchmarks/common.py).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_dict_updates, emit, hmean
+from repro.api import Dictionary
+from repro.core import semantics as sem
+
+
+def run(log_b: int = 10, sub_sizes=(1, 16, 256), n_calls: int = 64,
+        smoke: bool = False) -> None:
+    if smoke:
+        log_b, sub_sizes, n_calls = 6, (1, 8), 24
+    b = 1 << log_b
+    rng = np.random.default_rng(0)
+
+    # --- 1. sub-batch insert rates -----------------------------------------
+    for s in sub_sizes:
+        d = Dictionary.create("lsm", batch_size=b, num_levels=8, validate=False)
+        keys = [jnp.asarray(rng.integers(0, sem.MAX_USER_KEY, s, dtype=np.int32))
+                for _ in range(n_calls)]
+        vals = [jnp.asarray(rng.integers(0, 1 << 20, s, dtype=np.int32))
+                for _ in range(n_calls)]
+        # warm the staged-update executable
+        w = Dictionary.create("lsm", batch_size=b, num_levels=8, validate=False)
+        jax.block_until_ready(w.insert(keys[0], vals[0]).state)
+        d, rates = bench_dict_updates(d, keys, vals)
+        name = f"streaming/insert_s{s}_b2^{log_b}"
+        emit(name, s / (hmean(rates) * 1e6) if rates else 0,
+             f"sub-batch rate={hmean(rates):.2f}Melem/s over {n_calls} calls")
+        # staged coalescing: N*s elements may occupy at most ceil(N*s/b) slots
+        slots = int(d.state.r)
+        max_slots = -(-n_calls * s // b)
+        assert slots <= max_slots, (slots, max_slots)
+        emit(f"{name}/slots", 0.0,
+             f"batch_slots={slots} (<= ceil(N*s/b)={max_slots}; pad-every-call "
+             f"policy would use {n_calls})")
+
+    # --- 2. capacity-overflow point for size-1 inserts ---------------------
+    # Tiny LSM so the experiment is fast: capacity = bb * (2^L - 1).
+    bb, levels = (8, 3) if smoke else (32, 3)
+    max_batches = (1 << levels) - 1
+    d = Dictionary.create("lsm", batch_size=bb, num_levels=levels, validate=False)
+    n_inserts = 0
+    t0 = time.perf_counter()
+    # The old policy overflowed after max_batches size-1 calls; the buffer
+    # sustains ~bb * max_batches + bb before the latch trips.
+    limit = bb * (max_batches + 1) + 1
+    while not bool(d.overflowed()) and n_inserts < limit:
+        d = d.insert(np.array([n_inserts % sem.MAX_USER_KEY]), np.array([1]))
+        n_inserts += 1
+    dt = time.perf_counter() - t0
+    overflow_point = n_inserts
+    improvement = overflow_point / max_batches
+    assert overflow_point >= bb * max_batches, (overflow_point, bb * max_batches)
+    emit(f"streaming/overflow_point_b{bb}_L{levels}", dt / max(n_inserts, 1),
+         f"size-1 inserts before overflow={overflow_point} vs pad-every-call "
+         f"policy={max_batches} ({improvement:.0f}x, ~b={bb})")
+
+    # --- 3. flush-threshold policy cost ------------------------------------
+    s = sub_sizes[0]
+    for threshold, label in ((1, "flush_every_call"), (None, "coalesce")):
+        d = Dictionary.create("lsm", batch_size=b, num_levels=8, validate=False,
+                              flush_threshold=threshold)
+        keys = [jnp.asarray(rng.integers(0, sem.MAX_USER_KEY, s, dtype=np.int32))
+                for _ in range(n_calls)]
+        vals = [jnp.asarray(np.ones(s, np.int32)) for _ in range(n_calls)]
+        w = Dictionary.create("lsm", batch_size=b, num_levels=8, validate=False,
+                              flush_threshold=threshold)
+        jax.block_until_ready(w.insert(keys[0], vals[0]).state)  # warm
+        d, rates = bench_dict_updates(d, keys, vals)
+        emit(f"streaming/policy_{label}_s{s}", s / (hmean(rates) * 1e6) if rates else 0,
+             f"rate={hmean(rates):.2f}Melem/s slots={int(d.state.r)}")

@@ -27,23 +27,29 @@ def main():
     t0 = time.perf_counter()
     n_updates = 0
     for step in range(24):
-        # 75% position updates, 25% expirations, in one mixed batch
-        keys = rng.integers(0, GRID, B).astype(np.int32)
-        vals = rng.integers(0, 1 << 20, B).astype(np.int32)
-        dels = rng.random(B) < 0.25
+        # 75% position updates, 25% expirations, in one mixed RAGGED batch —
+        # objects report at their own cadence, so sizes are rarely b-aligned;
+        # the facade's write buffer coalesces the trickle (no batch slot is
+        # consumed until b elements are pending).
+        n = int(rng.integers(B // 2, B + B // 2))
+        keys = rng.integers(0, GRID, n).astype(np.int32)
+        vals = rng.integers(0, 1 << 20, n).astype(np.int32)
+        dels = rng.random(n) < 0.25
         d = d.update(jnp.asarray(keys), jnp.asarray(vals), is_delete=jnp.asarray(dels))
-        n_updates += B
+        n_updates += n
 
         if step % 6 == 5:
             # dashboard: occupancy of 4 map windows
             k1 = jnp.asarray([0, GRID // 4, GRID // 2, 3 * GRID // 4], jnp.int32)
             k2 = k1 + GRID // 4 - 1
             counts, ok = d.count(k1, k2, plan)
-            resident = int(d.state.r) * B
+            staged = int(d.pending())
+            resident = int(d.state.r) * B + staged
             live = int(d.size())
             stale_frac = 1 - live / max(resident, 1)
             print(f"step {step:2d}: windows={np.asarray(counts).tolist()} "
-                  f"resident={resident} live={live} stale={stale_frac:.0%}")
+                  f"resident={resident} (staged={staged}) "
+                  f"live={live} stale={stale_frac:.0%}")
             # cleanup policy: compact when >40% of the structure is stale
             if stale_frac > 0.4:
                 d = d.cleanup()

@@ -70,6 +70,15 @@ class Backend(abc.ABC):
         backends, the *guaranteed* global budget (worst-case ownership skew)."""
 
     @property
+    def max_query_candidates(self) -> int:
+        """Largest number of resident elements one [k1, k2] query window can
+        overlap: capacity plus any write-buffer slots. QueryPlan auto-sizing
+        clamps to this (clamping to bare capacity would leave a full
+        structure's count/range permanently inexact once the buffer holds
+        residents). Buffered backends override."""
+        return self.capacity
+
+    @property
     def num_shards(self) -> int:
         """Device partitions behind this backend (1 = single-device).
 
@@ -99,6 +108,31 @@ class Backend(abc.ABC):
     def update_encoded(self, state: BackendState, key_vars, values) -> BackendState:
         """Apply one b-wide encoded batch (key-variables + values)."""
         raise CapabilityError(self._no("update"))
+
+    def stage_encoded(self, state: BackendState, key_vars, values, count) -> BackendState:
+        """Stage one b-wide encoded sub-batch: the `count` real lanes are
+        front-compacted in arrival order, the rest placebo.
+
+        Contract: the later lane is the newer write — a later insert beats an
+        earlier same-call tombstone (the write-buffer recency rule,
+        docs/DESIGN.md §5) — and `count` bounds the occupancy a buffered
+        backend may consume (placebo lanes never occupy buffer slots).
+        Backends without a staging buffer apply immediately with an
+        equivalent recency-sorted merge (see SortedArrayBackend)."""
+        raise CapabilityError(self._no("update"))
+
+    def flush_state(self, state: BackendState, min_pending: int = 1) -> BackendState:
+        """Push staged (write-buffer) updates into the main structure when at
+        least `min_pending` are buffered. Default: no buffer, nothing to do."""
+        del min_pending
+        return state
+
+    def pending_count(self, state: BackendState):
+        """Staged-but-unflushed element count (int32 scalar; 0 if unbuffered)."""
+        del state
+        import jax.numpy as jnp
+
+        return jnp.zeros((), jnp.int32)
 
     @abc.abstractmethod
     def lookup(self, state: BackendState, keys) -> Tuple[Any, Any]:

@@ -50,10 +50,12 @@ from repro.core import queries
 from repro.core import sorted_array as sa
 from repro.core.lsm import (
     LSMConfig,
+    all_runs,
     lsm_bulk_build,
+    lsm_flush,
     lsm_init,
+    lsm_stage,
     lsm_update,
-    level_runs,
 )
 
 
@@ -95,6 +97,11 @@ class LSMBackend(Backend):
     def capacity(self) -> int:
         return self.cfg.capacity
 
+    @property
+    def max_query_candidates(self) -> int:
+        # Levels plus the b write-buffer slots a query window can overlap.
+        return self.cfg.capacity + self.cfg.batch_size
+
     def init(self):
         return lsm_init(self.cfg)
 
@@ -104,22 +111,31 @@ class LSMBackend(Backend):
     def update_encoded(self, state, key_vars, values):
         return lsm_update(self.cfg, state, key_vars, values)
 
+    def stage_encoded(self, state, key_vars, values, count):
+        return lsm_stage(self.cfg, state, key_vars, values, count)
+
+    def flush_state(self, state, min_pending: int = 1):
+        return lsm_flush(self.cfg, state, min_pending)
+
+    def pending_count(self, state):
+        return state.buf_n
+
     def lookup(self, state, keys):
-        return queries.lookup_runs(level_runs(self.cfg, state), keys)
+        return queries.lookup_runs(all_runs(self.cfg, state), keys)
 
     def count(self, state, k1, k2, plan: QueryPlan):
-        return queries.count_runs(level_runs(self.cfg, state), k1, k2, plan.max_candidates)
+        return queries.count_runs(all_runs(self.cfg, state), k1, k2, plan.max_candidates)
 
     def range(self, state, k1, k2, plan: QueryPlan):
         return queries.range_runs(
-            level_runs(self.cfg, state), k1, k2, plan.max_candidates, plan.max_results
+            all_runs(self.cfg, state), k1, k2, plan.max_candidates, plan.max_results
         )
 
     def cleanup(self, state):
         return lsm_cleanup_mod.lsm_cleanup(self.cfg, state)
 
     def size(self, state):
-        return queries.valid_count_runs(level_runs(self.cfg, state))
+        return queries.valid_count_runs(all_runs(self.cfg, state))
 
     def overflowed(self, state):
         return state.overflowed
@@ -192,6 +208,12 @@ class ShardedLSMBackend(Backend):
         return self.cfg.local.capacity
 
     @property
+    def max_query_candidates(self) -> int:
+        # max_candidates is applied per shard (queries clip to shard windows),
+        # so the bound is the per-shard arena plus its local write buffer.
+        return self.cfg.local.capacity + self.cfg.local.batch_size
+
+    @property
     def num_shards(self) -> int:
         return self.cfg.num_shards
 
@@ -203,6 +225,15 @@ class ShardedLSMBackend(Backend):
 
     def update_encoded(self, state, key_vars, values):
         return dist.dist_update(self.cfg, self.mesh, state, key_vars, values)
+
+    def stage_encoded(self, state, key_vars, values, count):
+        return dist.dist_stage(self.cfg, self.mesh, state, key_vars, values, count)
+
+    def flush_state(self, state, min_pending: int = 1):
+        return dist.dist_flush(self.cfg, self.mesh, state, min_pending)
+
+    def pending_count(self, state):
+        return dist.dist_pending(self.cfg, self.mesh, state)
 
     def lookup(self, state, keys):
         return dist.dist_lookup(self.cfg, self.mesh, state, keys)
@@ -267,6 +298,12 @@ class SortedArrayBackend(Backend):
 
     def update_encoded(self, state, key_vars, values):
         return sa.sa_update_batch(self.cfg, state, key_vars, values)
+
+    def stage_encoded(self, state, key_vars, values, count):
+        # No staging buffer: apply immediately with the recency sort — staged
+        # elements are the newest run either way, so queries agree with the
+        # buffered LSM backends lane-for-lane (flush_state is a no-op).
+        return sa.sa_stage(self.cfg, state, key_vars, values, count)
 
     def _runs(self, state):
         return [(state.key_vars, state.values)]

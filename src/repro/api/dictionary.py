@@ -16,10 +16,17 @@ Design:
   receiving handle is consumed (its buffers are donated) and the returned
   handle must be used from then on.
 
-* **Flexible batch contract.** The paper's update is rigidly b-wide; the
-  facade accepts any length, placebo-pads to the next multiple of b, and
-  cascades the chunks through a `lax.scan` (single chunk: direct call).
-  Partial lanes can also be masked per-call via `valid=`.
+* **Coalescing batch contract.** The paper's update is rigidly b-wide; the
+  facade accepts any length and *stages* it: real lanes compact to the front
+  (arrival order preserved), split into b-wide sub-batches, and feed the
+  backend's write buffer (`stage_encoded`) through a `lax.scan` (single
+  chunk: direct call). Sub-batch updates no longer consume a batch slot each
+  — a slot is consumed only when a buffer overflows b pending elements, on
+  explicit `flush()`, or when the `flush_threshold` policy triggers.
+  Duplicate keys resolve in strict arrival order (the write-buffer recency
+  rule, docs/DESIGN.md §5): the later lane/call wins, including a later
+  insert over an earlier tombstone. Partial lanes can be masked per-call via
+  `valid=`; masked lanes never occupy buffer slots.
 
 * **Key-domain validation.** Keys outside [0, MAX_USER_KEY] alias the
   placebo key or flip sign under the status-bit encoding and silently
@@ -45,6 +52,7 @@ from repro.api.backend import (
 )
 from repro.api.plan import QueryPlan
 from repro.core import semantics as sem
+from repro.core.lsm import compact_real
 
 # (backend, op, statics) -> jitted executable. jax.jit keeps the per-shape
 # specialization under each entry, so this stays small: one entry per
@@ -67,49 +75,61 @@ def _cached_exec(backend: Backend, op: str, fn, *, donate_state: bool = False, s
 # -- op bodies (backend bound statically via the cache) -----------------------
 
 
-def _exec_update(backend, state, keys, values, is_delete, valid):
-    """Encode, pad to k*b, and apply the chunks (scan when k > 1).
+def _exec_update(backend, flush_threshold, state, keys, values, is_delete, valid):
+    """Encode, front-compact, pad to k*b, and stage the sub-batches (scan
+    when k > 1), then apply the optional flush-threshold policy.
 
     Everything from encoding onward runs inside the jitted executable so the
     eager path does no array work (the Table 2 timing protocol measures this
     whole pipeline as the update cost, like the hand-rolled jit it replaced).
 
-    Within one b-chunk each row is reversed before the sort: the sort is
-    stable, so for duplicate keys of equal status the LAST lane of the user
-    batch sorts first and wins — consistent with the across-chunk rule where
-    later chunks are newer. (A tombstone still beats a same-chunk insert of
-    its key regardless of order: the status bit orders it first — the
-    paper's sorted-batch invariant 2.)
+    Lanes reach `stage_encoded` in arrival order with a per-chunk real-lane
+    count: duplicates resolve strictly by sequence (later lane/call wins —
+    the write-buffer recency rule), and masked-out lanes are compacted away
+    so they never occupy buffer slots.
 
-    Sharded backends need no special casing here: each b-wide chunk reaches
-    `update_encoded` whole (all-gathered under shard_map), every shard keeps
-    its owned lanes and placebos the rest, so the per-shard batch-of-b
-    invariant holds and placebo padding/duplicate-recency rules are
-    preserved lane-for-lane on the owning shard.
+    Sharded backends need no special casing here: each b-wide sub-batch
+    reaches `stage_encoded` whole (all-gathered under shard_map); every
+    shard re-compacts its owned lanes into its local buffer, so arrival
+    order is preserved per key owner.
     """
     kv = sem.encode(keys, is_delete)
     vals = jnp.where(is_delete, sem.EMPTY_VALUE, values)
-    if valid is not None:
-        kv = jnp.where(valid, kv, sem.PLACEBO_KV)
-        vals = jnp.where(valid, vals, sem.EMPTY_VALUE)
     b = backend.batch_size
     n = keys.shape[0]
+    if valid is not None:
+        # compact_real drops masked lanes (placebo-prefilled scatter), so no
+        # pre-masking is needed.
+        kv, vals, total_real = compact_real(kv, vals, valid)
+    else:
+        total_real = jnp.asarray(n, jnp.int32)
     k = -(-n // b)
     pad = k * b - n
     if pad:
         kv = jnp.concatenate([kv, jnp.full((pad,), sem.PLACEBO_KV, jnp.int32)])
         vals = jnp.concatenate([vals, jnp.full((pad,), sem.EMPTY_VALUE, jnp.int32)])
-    kv = kv.reshape(k, b)[:, ::-1]
-    vals = vals.reshape(k, b)[:, ::-1]
+    kv = kv.reshape(k, b)
+    vals = vals.reshape(k, b)
+    counts = jnp.clip(total_real - jnp.arange(k, dtype=jnp.int32) * b, 0, b)
     if k == 1:
-        return backend.update_encoded(state, kv[0], vals[0])
+        state = backend.stage_encoded(state, kv[0], vals[0], counts[0])
+    else:
+        def body(st, chunk):
+            ckv, cval, cnt = chunk
+            return backend.stage_encoded(st, ckv, cval, cnt), None
 
-    def body(st, chunk):
-        ckv, cval = chunk
-        return backend.update_encoded(st, ckv, cval), None
-
-    state, _ = jax.lax.scan(body, state, (kv, vals))
+        state, _ = jax.lax.scan(body, state, (kv, vals, counts))
+    if flush_threshold is not None:
+        state = backend.flush_state(state, flush_threshold)
     return state
+
+
+def _exec_flush(backend, state):
+    return backend.flush_state(state)
+
+
+def _exec_pending(backend, state):
+    return backend.pending_count(state)
 
 
 def _exec_bulk_build(backend, keys, values):
@@ -187,17 +207,20 @@ class Dictionary:
     and donate the old one's buffers — keep only the returned handle.
     """
 
-    __slots__ = ("_backend", "_state", "_validate")
+    __slots__ = ("_backend", "_state", "_validate", "_flush_threshold")
 
-    def __init__(self, backend: Backend, state, validate: bool = True):
+    def __init__(self, backend: Backend, state, validate: bool = True,
+                 flush_threshold: Optional[int] = None):
         self._backend = backend
         self._state = state
         self._validate = validate
+        self._flush_threshold = flush_threshold
 
     # -- construction --------------------------------------------------------
 
     @classmethod
-    def create(cls, backend: str = "lsm", validate: bool = True, **options) -> "Dictionary":
+    def create(cls, backend: str = "lsm", validate: bool = True,
+               flush_threshold: Optional[int] = None, **options) -> "Dictionary":
         """Empty dictionary:
         `create("lsm"|"lsm_sharded"|"sorted_array"|"cuckoo", ...)`.
 
@@ -207,9 +230,22 @@ class Dictionary:
         max_rounds (cuckoo). `validate=False` skips the host-side
         key-domain / uniqueness checks on concrete inputs (hot paths,
         benchmarks); capability errors always raise.
+
+        `flush_threshold` (buffered backends): after every update, any write
+        buffer holding >= flush_threshold staged elements is flushed into the
+        main structure (1 = flush every call, the old pad-every-call
+        latency/slot profile). Default None: buffers flush only on overflow,
+        explicit `flush()`, or `cleanup()`.
         """
         be = get_backend_class(backend).from_options(**options)
-        return cls(be, be.init(), validate)
+        if flush_threshold is not None:
+            t = int(flush_threshold)
+            if not 1 <= t <= be.batch_size:
+                raise ValueError(
+                    f"flush_threshold must be in [1, batch_size={be.batch_size}], got {t}"
+                )
+            flush_threshold = t
+        return cls(be, be.init(), validate, flush_threshold)
 
     # -- static introspection ------------------------------------------------
 
@@ -251,17 +287,24 @@ class Dictionary:
         if not flag:
             raise CapabilityError(self._backend._no(op))
 
+    def _evolve(self, new_state) -> "Dictionary":
+        return Dictionary(self._backend, new_state, self._validate, self._flush_threshold)
+
     # -- updates -------------------------------------------------------------
 
     def update(self, keys, values=None, is_delete=None, valid=None) -> "Dictionary":
         """Mixed batch of any length: insert where ~is_delete, tombstone
-        where is_delete; `valid=False` lanes become placebo padding.
+        where is_delete; `valid=False` lanes are compacted away (they never
+        occupy write-buffer slots).
 
-        Length is padded to the next multiple of batch_size; multiple chunks
-        cascade through one scanned executable. Later entries win on
-        duplicate keys (within one call and across calls), except that a
-        tombstone beats a same-chunk insert of its key regardless of order.
-        Returns the new handle (the old one's buffers are donated).
+        Updates are *staged*: sub-batches coalesce in the backend's write
+        buffer and consume a batch slot only when more than batch_size
+        elements are pending (or on `flush()` / the flush_threshold policy).
+        Duplicate keys resolve in strict arrival order — the later lane or
+        call wins, including a later insert over an earlier tombstone (the
+        write-buffer recency rule; staged entries are immediately visible to
+        every query). Returns the new handle (the old one's buffers are
+        donated).
         """
         caps = self._backend.caps
         self._require("update", caps.supports_updates)
@@ -293,9 +336,12 @@ class Dictionary:
         if valid is not None:
             valid = jnp.asarray(valid, bool)
 
-        f = _cached_exec(self._backend, "update", _exec_update, donate_state=True)
+        f = _cached_exec(
+            self._backend, "update", _exec_update,
+            donate_state=True, statics=(self._flush_threshold,),
+        )
         new_state = f(self._state, keys, values, is_delete, valid)
-        return Dictionary(self._backend, new_state, self._validate)
+        return self._evolve(new_state)
 
     def insert(self, keys, values, valid=None) -> "Dictionary":
         """Insert (key, value) pairs; newer values win on duplicate keys."""
@@ -326,13 +372,34 @@ class Dictionary:
                 raise ValueError("bulk_build requires unique keys (paper §5.2)")
         values = jnp.asarray(values, jnp.int32)
         f = _cached_exec(self._backend, "bulk_build", _exec_bulk_build)
-        return Dictionary(self._backend, f(keys, values), self._validate)
+        return self._evolve(f(keys, values))
 
     def cleanup(self) -> "Dictionary":
-        """Purge stale elements and tombstones (paper §3.6/§4.5)."""
+        """Purge stale elements and tombstones (paper §3.6/§4.5).
+
+        Buffered backends fold staged updates into the compaction (the
+        cleanup-boundary flush) — afterwards `pending()` is 0 and no batch
+        slot was wasted on a partial batch."""
         self._require("cleanup", self._backend.caps.supports_cleanup)
         f = _cached_exec(self._backend, "cleanup", _exec_cleanup, donate_state=True)
-        return Dictionary(self._backend, f(self._state), self._validate)
+        return self._evolve(f(self._state))
+
+    def flush(self) -> "Dictionary":
+        """Push staged (write-buffer) updates into the main structure.
+
+        No-op for backends without a write buffer and for empty buffers. A
+        partial buffer is placebo-padded to a full batch, consuming one batch
+        slot — the cost the coalescing update path defers. Returns the new
+        handle (the old one's buffers are donated)."""
+        f = _cached_exec(self._backend, "flush", _exec_flush, donate_state=True)
+        return self._evolve(f(self._state))
+
+    def pending(self):
+        """Staged-but-unflushed element count (int32 scalar; 0 if unbuffered).
+
+        For sharded backends this sums the shard-local buffers."""
+        f = _cached_exec(self._backend, "pending", _exec_pending)
+        return f(self._state)
 
     # -- queries -------------------------------------------------------------
 
@@ -345,7 +412,7 @@ class Dictionary:
         return f(self._state, keys)
 
     def _resolved_plan(self, plan: Optional[QueryPlan]) -> QueryPlan:
-        return (plan or QueryPlan()).resolved(self._backend.capacity)
+        return (plan or QueryPlan()).resolved(self._backend.max_query_candidates)
 
     def count(self, k1, k2, plan: Optional[QueryPlan] = None):
         """COUNT(k1, k2) per query -> (counts: int32[nq], ok: bool[nq]).
@@ -387,15 +454,16 @@ class Dictionary:
 
 
 def _dict_flatten(d: Dictionary):
-    return (d._state,), (d._backend, d._validate)
+    return (d._state,), (d._backend, d._validate, d._flush_threshold)
 
 
 def _dict_unflatten(aux, children):
-    backend, validate = aux
+    backend, validate, flush_threshold = aux
     obj = object.__new__(Dictionary)
     object.__setattr__(obj, "_backend", backend)
     object.__setattr__(obj, "_state", children[0])
     object.__setattr__(obj, "_validate", validate)
+    object.__setattr__(obj, "_flush_threshold", flush_threshold)
     return obj
 
 

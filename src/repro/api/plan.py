@@ -35,18 +35,23 @@ class QueryPlan:
             if v is not None and v < 1:
                 raise ValueError(f"{f} must be >= 1, got {v}")
 
-    def resolved(self, capacity: int) -> "QueryPlan":
-        """Concrete plan for a dictionary of the given static capacity.
+    def resolved(self, max_candidate_bound: int) -> "QueryPlan":
+        """Concrete plan for a dictionary whose queries can overlap at most
+        `max_candidate_bound` elements (static capacity plus any write-buffer
+        slots — `Backend.max_query_candidates`; clamping to bare capacity
+        would make a full-structure query inexact with no plan able to fix
+        it once the buffer holds residents).
 
-        Heuristic: exact (full capacity) while the tile stays small
-        (<= 4096); beyond that, the power of two at ~capacity/4 (min 4096)
-        — a bounded tile that is still generous for the paper's query
-        widths (expected range lengths 8..1024). `ok=False` in results
-        signals the heuristic was too small for a particular query mix.
+        Heuristic: exact (full bound) while the tile stays small (<= 4096);
+        beyond that, the power of two at ~bound/4 (min 4096) — a bounded
+        tile that is still generous for the paper's query widths (expected
+        range lengths 8..1024). `ok=False` in results signals the heuristic
+        was too small for a particular query mix.
         """
+        bound = max_candidate_bound
         mc = self.max_candidates
         if mc is None:
-            mc = capacity if capacity <= 4096 else max(4096, 1 << (capacity.bit_length() - 3))
-        mc = min(mc, capacity)
+            mc = bound if bound <= 4096 else max(4096, 1 << (bound.bit_length() - 3))
+        mc = min(mc, bound)
         mr = self.max_results if self.max_results is not None else mc
         return QueryPlan(max_candidates=mc, max_results=mr)

@@ -5,6 +5,8 @@ from repro.core.lsm import (  # noqa: F401
     LSMState,
     lsm_init,
     lsm_update,
+    lsm_stage,
+    lsm_flush,
     lsm_insert,
     lsm_delete,
     lsm_update_mixed,
@@ -12,6 +14,9 @@ from repro.core.lsm import (  # noqa: F401
     lsm_num_elements,
     level_runs,
     level_view,
+    buffer_run,
+    all_runs,
+    compact_real,
 )
 from repro.core.queries import (  # noqa: F401
     lsm_lookup,

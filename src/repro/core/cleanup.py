@@ -1,8 +1,8 @@
 """CLEANUP (paper §3.6 / §4.5): purge stale elements and re-slice the levels.
 
 Strategy (all fixed-shape, one jitted program):
-  1. iteratively stable-merge all levels newest-first — merging already-sorted
-     runs is much cheaper than a full resort (paper §4.5);
+  1. stable-merge the write buffer (newest) and all levels newest-first —
+     merging already-sorted runs is much cheaper than a full resort (§4.5);
   2. mark stale elements: an element survives iff it is the *first* (most
      recent) element of its equal-key segment, is a regular element (not a
      tombstone), and is not a placebo;
@@ -11,13 +11,28 @@ Strategy (all fixed-shape, one jitted program):
      "pad with < b placebo elements" step;
   5. redistribute the sorted, deduplicated prefix into levels according to the
      bits of the new resident-batch count (smallest keys → smallest levels).
+
+Folding the buffer into the merge (instead of flushing it first) is the
+cleanup-boundary flush the write-buffer design calls for: it empties the
+buffer without placebo-padding a partial batch, so cleanup never wastes a
+slot. Because the buffer can hold up to b elements beyond the level arenas,
+survivors can exceed the static capacity; the excess (largest keys) is
+dropped and the overflow latch set — same contract as an overflowing update.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.lsm import LSMConfig, LSMState, _placebo, _redistribute, level_view
+from repro.core.lsm import (
+    LSMConfig,
+    LSMState,
+    _fresh_buffer,
+    _placebo,
+    _redistribute,
+    buffer_run,
+    level_view,
+)
 from repro.kernels import ops
 
 
@@ -35,30 +50,38 @@ def merge_all_levels(cfg: LSMConfig, state: LSMState):
 def lsm_cleanup(cfg: LSMConfig, state: LSMState) -> LSMState:
     from repro.core.queries import survivor_mask
 
+    b = cfg.batch_size
+    buf_kv, buf_val = buffer_run(cfg, state)  # newest run, sorted
     merged_kv, merged_val = merge_all_levels(cfg, state)
+    merged_kv, merged_val = ops.merge_sorted(buf_kv, buf_val, merged_kv, merged_val)
     survives = survivor_mask(merged_kv)
 
     total = jnp.sum(survives).astype(jnp.int32)
+    overflow = total > cfg.capacity
     tgt = jnp.cumsum(survives) - 1
-    tgt = jnp.where(survives, tgt, cfg.capacity)  # out-of-range → dropped
+    # Survivors past capacity (possible only via a near-full buffer) and
+    # non-survivors scatter out of range and are dropped.
+    tgt = jnp.where(survives & (tgt < cfg.capacity), tgt, cfg.capacity)
     compact_kv, compact_val = _placebo(cfg.capacity)
     compact_kv = compact_kv.at[tgt].set(merged_kv, mode="drop")
     compact_val = compact_val.at[tgt].set(merged_val, mode="drop")
 
-    b = cfg.batch_size
-    r_new = ((total + b - 1) // b).astype(jnp.int32)
+    total_kept = jnp.minimum(total, cfg.capacity)
+    r_new = ((total_kept + b - 1) // b).astype(jnp.int32)
     kvs, vals = _redistribute(cfg, compact_kv, compact_val, r_new)
     return LSMState(
         key_vars=kvs,
         values=vals,
         r=r_new,
-        overflowed=state.overflowed,
+        overflowed=state.overflowed | overflow,
+        **_fresh_buffer(b),
     )
 
 
 def lsm_valid_count(cfg: LSMConfig, state: LSMState):
-    """Number of live (visible) elements — what cleanup would retain."""
+    """Number of live (visible) elements — what cleanup would retain
+    (write-buffer residents included)."""
     from repro.core.queries import valid_count_runs
-    from repro.core.lsm import level_runs
+    from repro.core.lsm import all_runs
 
-    return valid_count_runs(level_runs(cfg, state))
+    return valid_count_runs(all_runs(cfg, state))

@@ -10,6 +10,12 @@ its range:
     holds per shard, so the local binary-counter cascade is unchanged. (The
     all-gather is the TPU-native stand-in for a ragged all-to-all; bytes moved are
     identical up to the skew factor and the shapes stay static.)
+  * STAGE (write buffer): same ownership filter, then owned lanes compact to
+    the front (arrival order preserved) and append into the shard-LOCAL write
+    buffer (`lsm_stage`) — zero communication beyond the already-replicated
+    batch, and no batch slot consumed until a shard's own buffer overflows.
+    Buffers fill at ownership-skew-dependent rates, so shards flush at
+    different times; FLUSH is likewise purely shard-local.
   * LOOKUP: queries are broadcast; the owner answers; results combine with
     a psum using ⊥-identities (non-owners contribute 0/false, exactly one
     owner can report found, so the sum IS the owner's answer — unlike a max
@@ -53,13 +59,17 @@ from repro.core.cleanup import lsm_cleanup
 from repro.core.lsm import (
     LSMConfig,
     LSMState,
+    _fresh_buffer,
     _placebo,
     _redistribute,
+    compact_real,
+    lsm_flush,
     lsm_init,
+    lsm_stage,
     lsm_update,
 )
 from repro.core.queries import count_runs, lookup_runs, range_runs, valid_count_runs
-from repro.core.lsm import level_runs
+from repro.core.lsm import all_runs
 from repro.kernels import ops
 
 
@@ -134,6 +144,63 @@ def dist_update(cfg: DistLSMConfig, mesh, states, key_vars, values) -> LSMState:
     return f(states, key_vars, values)
 
 
+def dist_stage(cfg: DistLSMConfig, mesh, states, key_vars, values, count) -> LSMState:
+    """Stage one encoded sub-batch into the shard-local write buffers.
+
+    key_vars/values: int32[b] with the `count` real lanes front-compacted in
+    arrival order (the facade's contract for `stage_encoded`). Each shard
+    keeps its owned lanes, re-compacts them to the front (order preserved),
+    and appends to its LOCAL buffer — no communication beyond the replicated
+    input, and no batch slot consumed until that shard's buffer overflows.
+    """
+    state_spec = P(cfg.axis)
+
+    def body(states, key_vars, values, count):
+        st = _local_state(states)
+        shard = jax.lax.axis_index(cfg.axis).astype(jnp.int32)
+        lane = jnp.arange(cfg.local.batch_size, dtype=jnp.int32)
+        owner = owner_of(cfg, sem.original_key(key_vars))
+        mine = (lane < count) & (owner == shard)
+        kv, val, cnt = compact_real(key_vars, values, mine)
+        st = lsm_stage(cfg.local, st, kv, val, cnt)
+        return _restack(st)
+
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(state_spec, P(), P(), P()),
+        out_specs=state_spec,
+        check_vma=False,
+    )
+    return f(states, key_vars, values, count)
+
+
+def dist_flush(cfg: DistLSMConfig, mesh, states, min_pending: int = 1) -> LSMState:
+    """Flush shard-local write buffers holding >= min_pending elements.
+
+    Purely shard-local (zero communication) — shards flush independently, so
+    ownership skew never forces an empty shard to burn a batch slot."""
+    state_spec = P(cfg.axis)
+
+    def body(states):
+        return _restack(lsm_flush(cfg.local, _local_state(states), min_pending))
+
+    f = shard_map(body, mesh=mesh, in_specs=(state_spec,), out_specs=state_spec,
+                  check_vma=False)
+    return f(states)
+
+
+def dist_pending(cfg: DistLSMConfig, mesh, states):
+    """Total write-buffer residents across shards (int32 scalar, psum)."""
+    state_spec = P(cfg.axis)
+
+    def body(states):
+        return jax.lax.psum(_local_state(states).buf_n, cfg.axis)
+
+    f = shard_map(body, mesh=mesh, in_specs=(state_spec,), out_specs=P(),
+                  check_vma=False)
+    return f(states)
+
+
 def dist_lookup(cfg: DistLSMConfig, mesh, states, keys):
     """lookup(states, keys[q]) -> (found[q], values[q])."""
     state_spec = P(cfg.axis)
@@ -142,7 +209,7 @@ def dist_lookup(cfg: DistLSMConfig, mesh, states, keys):
         st = _local_state(states)
         shard = jax.lax.axis_index(cfg.axis).astype(jnp.int32)
         mine = owner_of(cfg, keys) == shard
-        found, vals = lookup_runs(level_runs(cfg.local, st), keys)
+        found, vals = lookup_runs(all_runs(cfg.local, st), keys)
         found = found & mine
         vals = jnp.where(found, vals, 0)
         # ⊥-identity combine: exactly one shard can report found, everyone
@@ -178,7 +245,7 @@ def dist_count(cfg: DistLSMConfig, mesh, states, k1, k2, max_candidates: int):
         k1c = jnp.clip(k1, lo, hi + 1)
         k2c = jnp.clip(k2, lo - 1, hi)
         nonempty = k1c <= k2c
-        counts, ok = count_runs(level_runs(cfg.local, st), k1c, k2c, max_candidates)
+        counts, ok = count_runs(all_runs(cfg.local, st), k1c, k2c, max_candidates)
         counts = jnp.where(nonempty, counts, 0)
         ok = ok | ~nonempty
         counts = jax.lax.psum(counts, cfg.axis)
@@ -214,7 +281,7 @@ def dist_range(cfg: DistLSMConfig, mesh, states, k1, k2,
         k2c = jnp.clip(k2, lo - 1, hi)
         nonempty = (k1c <= k2c)
         keys, vals, counts, ok = range_runs(
-            level_runs(cfg.local, st), k1c, k2c, max_candidates, max_results
+            all_runs(cfg.local, st), k1c, k2c, max_candidates, max_results
         )
         counts = jnp.where(nonempty, counts, 0)
         ok = ok | ~nonempty
@@ -279,7 +346,7 @@ def dist_size(cfg: DistLSMConfig, mesh, states):
 
     def body(states):
         st = _local_state(states)
-        local = valid_count_runs(level_runs(cfg.local, st))
+        local = valid_count_runs(all_runs(cfg.local, st))
         return jax.lax.psum(local, cfg.axis)
 
     f = shard_map(body, mesh=mesh, in_specs=(state_spec,), out_specs=P(),
@@ -324,6 +391,7 @@ def dist_bulk_build(cfg: DistLSMConfig, mesh, keys, values) -> LSMState:
         st = LSMState(
             key_vars=kvs, values=vals, r=r_new,
             overflowed=jnp.zeros((), dtype=bool),
+            **_fresh_buffer(b),
         )
         return _restack(st)
 
@@ -364,6 +432,16 @@ def make_dist_range(cfg: DistLSMConfig, mesh, max_candidates: int, max_results: 
 def make_dist_cleanup(cfg: DistLSMConfig, mesh):
     """Shard-local cleanup — zero communication."""
     return jax.jit(functools.partial(dist_cleanup, cfg, mesh), donate_argnums=0)
+
+
+def make_dist_stage(cfg: DistLSMConfig, mesh):
+    """Returns jitted stage(states, key_vars[b], values[b], count) -> states."""
+    return jax.jit(functools.partial(dist_stage, cfg, mesh), donate_argnums=0)
+
+
+def make_dist_flush(cfg: DistLSMConfig, mesh):
+    """Returns jitted flush(states) -> states (shard-local, zero comm)."""
+    return jax.jit(functools.partial(dist_flush, cfg, mesh), donate_argnums=0)
 
 
 def make_dist_size(cfg: DistLSMConfig, mesh):

@@ -16,7 +16,13 @@ fixed shapes (TPU-native: no dynamic allocation):
      element of each equal-key segment iff it is regular  (paper stage 5)
 
 The paper's warp-ballot counting in stage 5 has no TPU analogue; dense mask
-arithmetic over the padded tile is the VPU-idiomatic equivalent (DESIGN.md §8).
+arithmetic over the padded tile is the VPU-idiomatic equivalent
+(docs/DESIGN.md §8).
+
+The LSM entry points query `all_runs`: the write buffer (sorted on demand,
+newest-first within equal keys — docs/DESIGN.md §5) is the newest run, so
+staged sub-batch updates — including buffer-resident tombstones — are visible
+to lookup/count/range/size before any flush.
 """
 
 from __future__ import annotations
@@ -25,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import semantics as sem
-from repro.core.lsm import LSMConfig, LSMState, level_runs
+from repro.core.lsm import LSMConfig, LSMState, all_runs
 from repro.kernels import ops
 
 INT32_MAX = jnp.iinfo(jnp.int32).max
@@ -54,7 +60,7 @@ def lookup_runs(runs, query_keys):
 
 def lsm_lookup(cfg: LSMConfig, state: LSMState, query_keys):
     """Batched LOOKUP: returns (found: bool[nq], values: int32[nq])."""
-    return lookup_runs(level_runs(cfg, state), query_keys)
+    return lookup_runs(all_runs(cfg, state), query_keys)
 
 
 # ---------------------------------------------------------------------------
@@ -180,8 +186,8 @@ def valid_count_runs(runs):
 
 
 def lsm_count(cfg: LSMConfig, state: LSMState, k1, k2, max_candidates: int):
-    return count_runs(level_runs(cfg, state), k1, k2, max_candidates)
+    return count_runs(all_runs(cfg, state), k1, k2, max_candidates)
 
 
 def lsm_range(cfg: LSMConfig, state: LSMState, k1, k2, max_candidates: int, max_results: int):
-    return range_runs(level_runs(cfg, state), k1, k2, max_candidates, max_results)
+    return range_runs(all_runs(cfg, state), k1, k2, max_candidates, max_results)

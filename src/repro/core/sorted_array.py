@@ -54,8 +54,31 @@ def sa_bulk_build(cfg: SAConfig, keys, values) -> SAState:
 
 
 def sa_update_batch(cfg: SAConfig, state: SAState, key_vars, values) -> SAState:
-    """Merge a batch of encoded updates into the array (sort + full merge)."""
+    """Merge a batch of encoded updates into the array (sort + full merge).
+
+    In-batch duplicates follow the paper's rule: the full-key-variable sort
+    puts a tombstone before any same-batch insert of its key."""
     bkv, bval = ops.sort_pairs(jnp.asarray(key_vars, jnp.int32), jnp.asarray(values, jnp.int32))
+    return _sa_merge_sorted(cfg, state, bkv, bval)
+
+
+def sa_stage(cfg: SAConfig, state: SAState, key_vars, values, count=None) -> SAState:
+    """Apply one encoded sub-batch with the write-buffer recency rule.
+
+    The SA has no staging buffer — applying immediately is equivalent to the
+    LSM's buffer-then-flush because staged elements are queried as the newest
+    run either way. What must match is the duplicate rule: the recency sort
+    makes the later lane win (even a later insert over an earlier same-call
+    tombstone), unlike `sa_update_batch`'s paper rule. `count` is unused —
+    placebo lanes are invisible and excluded from the occupancy count."""
+    del count
+    bkv, bval = ops.sort_pairs_recency(
+        jnp.asarray(key_vars, jnp.int32), jnp.asarray(values, jnp.int32)
+    )
+    return _sa_merge_sorted(cfg, state, bkv, bval)
+
+
+def _sa_merge_sorted(cfg: SAConfig, state: SAState, bkv, bval) -> SAState:
     b = bkv.shape[0]
     a_keys = sem.original_key(bkv)          # batch = newer run
     c_keys = sem.original_key(state.key_vars)

@@ -69,6 +69,28 @@ def sort_pairs(key_vars, values):
     return ref.sort_ref(key_vars, values)
 
 
+def sort_pairs_recency(key_vars, values):
+    """Sort by ORIGINAL key; within equal keys the later input lane sorts
+    first (newest-first), regardless of status bit.
+
+    This is the write-buffer batch-formation rule (docs/DESIGN.md §5): strict
+    arrival order decides duplicates, unlike `sort_pairs`, whose full-key-
+    variable ordering makes a tombstone beat any same-batch insert of its key
+    (the paper's in-batch rule). Placebos sort last (maximum original key).
+    """
+    from repro.core import semantics as sem
+
+    n = key_vars.shape[0]
+    key_vars = jnp.asarray(key_vars, jnp.int32)
+    values = jnp.asarray(values, jnp.int32)
+    orig = sem.original_key(key_vars)
+    rev = jnp.arange(n, 0, -1, dtype=jnp.int32)  # later lane -> smaller rev
+    _, _, out_kv, out_val = jax.lax.sort(
+        (orig, rev, key_vars, values), dimension=0, is_stable=True, num_keys=2
+    )
+    return out_kv, out_val
+
+
 def lower_bound(sorted_orig_keys, query_keys):
     """Vectorized lower-bound (first index with key >= query)."""
     if _BACKEND == "pallas":
@@ -83,6 +105,25 @@ def lower_bound(sorted_orig_keys, query_keys):
 
 
 def upper_bound(sorted_orig_keys, query_keys):
+    """Vectorized upper-bound (first index with key > query).
+
+    For integer keys, upper_bound(k) == lower_bound(k + 1), so the streamed
+    Pallas lower-bound kernel accelerates both ends of the count/range
+    window. Guard: k + 1 would wrap at INT32_MAX, but every key the structure
+    can store (user keys plus the placebo key, all < 2**30) compares <= such
+    a query, so the answer is simply n.
+    """
+    if _BACKEND == "pallas":
+        from repro.kernels import lsm_lookup
+
+        n, q = sorted_orig_keys.shape[0], query_keys.shape[0]
+        if n % lsm_lookup.LEVEL_CHUNK == 0 and q % lsm_lookup.QUERY_BLOCK == 0:
+            qk = jnp.asarray(query_keys, jnp.int32)
+            safe = qk < jnp.iinfo(jnp.int32).max
+            lo = lsm_lookup.lower_bound_streamed(
+                sorted_orig_keys, jnp.where(safe, qk + 1, qk), interpret=_INTERPRET
+            )
+            return jnp.where(safe, lo, jnp.asarray(n, jnp.int32))
     return ref.upper_bound_ref(sorted_orig_keys, query_keys)
 
 

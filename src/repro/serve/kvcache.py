@@ -13,6 +13,15 @@ on-device):
   scans       = index.count/range over a sequence's key range (pages of one
                 sequence are contiguous keys -> range queries enumerate them)
 
+Admissions/evictions arrive as ragged trickles (a few sequences grow a page
+per decode step), and the facade's write buffer absorbs them: partial
+batches stage into the index's "level −1" instead of round-tripping as
+placebo-padded full batches, so each pt_allocate/pt_evict call no longer
+burns one of the LSM's 2^L - 1 batch slots (staged pages are still visible
+to every translation/scan). `PageTableConfig.flush_threshold` forwards the
+facade's flush policy; `pt_flush` forces the buffer down explicitly (e.g.
+before snapshotting the index).
+
 Keys pack (seq_id, page_idx) into the 30-bit user key space:
 key = seq_id * MAX_PAGES_PER_SEQ + page_idx, so one sequence's pages occupy a
 contiguous key range — COUNT(seq) and RANGE(seq) are the paper's ordered
@@ -41,16 +50,17 @@ MAX_PAGES_PER_SEQ = 1 << 12  # 4096 pages/sequence (x page_size tokens)
 @dataclasses.dataclass(frozen=True)
 class PageTableConfig:
     num_pages: int                 # physical slots in the KV pool
-    update_batch: int = 256        # index batch size b (padded with placebos)
+    update_batch: int = 256        # index batch size b (sub-batches stage)
     num_levels: int = 12
     backend: str = "lsm"           # any Dictionary backend with update support
+    flush_threshold: int | None = None  # facade flush policy (None: overflow-only)
 
     def make_index(self) -> Dictionary:
         # validate=False: keys come from page_key(), never user input, and the
         # host-side domain check would force a device sync per translation.
         return Dictionary.create(
             self.backend, batch_size=self.update_batch, num_levels=self.num_levels,
-            validate=False,
+            validate=False, flush_threshold=self.flush_threshold,
         )
 
 
@@ -139,7 +149,16 @@ def pt_seq_pages(cfg: PageTableConfig, state: PageTableState, seq_ids,
     return page_idx, slots, counts, ok
 
 
+def pt_flush(cfg: PageTableConfig, state: PageTableState) -> PageTableState:
+    """Force staged admissions/evictions out of the write buffer (e.g. before
+    snapshotting the index). Translations never require this — staged pages
+    are already visible to lookup/count/range."""
+    del cfg
+    return PageTableState(state.index.flush(), state.free_count, state.free_list)
+
+
 def pt_compact(cfg: PageTableConfig, state: PageTableState) -> PageTableState:
-    """Paper CLEANUP: purge tombstoned translations, shrink levels."""
+    """Paper CLEANUP: purge tombstoned translations, shrink levels (folds any
+    staged updates in — the cleanup-boundary flush)."""
     del cfg
     return PageTableState(state.index.cleanup(), state.free_count, state.free_list)

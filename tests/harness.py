@@ -1,15 +1,21 @@
 """Cross-backend differential test harness for the `Dictionary` facade.
 
-One randomized op sequence (insert / delete / mixed update / cleanup, with
-duplicate keys, tombstone churn, and boundary keys at 0 / MAX_USER_KEY /
-shard boundaries) is replayed against:
+One randomized op sequence (insert / delete / mixed update / cleanup /
+explicit flush, with ragged non-multiple-of-b lengths, duplicate keys,
+tombstone churn, and boundary keys at 0 / MAX_USER_KEY / shard boundaries)
+is replayed against:
 
   * a Python-dict oracle that models the facade's documented duplicate
-    semantics *exactly* (per b-chunk: any tombstone for a key beats every
-    same-chunk insert of it; otherwise the last lane wins; later chunks are
-    newer), and
+    semantics *exactly* — the write-buffer recency rule: lanes apply in
+    strict arrival order, the later lane/call wins, and (unlike the paper's
+    in-batch rule) a tombstone coalesced into the same eventual flush batch
+    as a later insert of its key still loses to it. Chunk boundaries,
+    buffer flushes, and cleanups are all semantically invisible; and
   * every backend under test — results must match the oracle AND each other
-    bit-for-bit, including range-row placebo padding.
+    bit-for-bit, including range-row placebo padding. Backends with a write
+    buffer answer queries over staged elements (tombstones included) before
+    any flush; the sorted array applies immediately — the oracle pins both
+    to the same answers.
 
 The generator is plain numpy driven by a seeded Generator so the same
 sequences run with or without hypothesis installed;
@@ -59,19 +65,24 @@ def key_pool(rng: np.random.Generator, extra: int = 24, shard_counts=SHARD_COUNT
 
 
 def gen_ops(rng: np.random.Generator, pool, *, n_steps=8, batch_size=8,
-            p_cleanup=0.12, p_delete=0.35, max_batches=3):
-    """Op sequence: ('update', keys, vals, dels) | ('cleanup',).
+            p_cleanup=0.12, p_delete=0.35, p_flush=0.1, max_batches=3):
+    """Op sequence: ('update', keys, vals, dels) | ('cleanup',) | ('flush',).
 
-    Update lengths are deliberately not multiples of batch_size (exercises
-    the facade's pad/split), keys are drawn with replacement (duplicates),
+    Update lengths span 1..max_batches*b + 1 and are deliberately not
+    multiples of batch_size (exercises the write-buffer staging and the
+    facade's compact/split), keys are drawn with replacement (duplicates),
     and values include negatives (exercises the sharded psum combine).
     """
     ops = []
     for _ in range(n_steps):
-        if rng.random() < p_cleanup:
+        roll = rng.random()
+        if roll < p_cleanup:
             ops.append(("cleanup",))
             continue
-        n = int(rng.integers(1, max_batches * batch_size))
+        if roll < p_cleanup + p_flush:
+            ops.append(("flush",))
+            continue
+        n = int(rng.integers(1, max_batches * batch_size + 2))
         keys = rng.choice(pool, n)
         vals = rng.integers(-1000, 1000, n).astype(np.int32)
         dels = rng.random(n) < p_delete
@@ -79,28 +90,23 @@ def gen_ops(rng: np.random.Generator, pool, *, n_steps=8, batch_size=8,
     return ops
 
 
-def oracle_apply(oracle: dict, op, batch_size: int) -> None:
-    """Replay one op on the dict oracle with exact per-chunk semantics.
+def oracle_apply(oracle: dict, op) -> None:
+    """Replay one op on the dict oracle: strict arrival-order semantics.
 
-    The facade splits a call into b-wide chunks; within a chunk the stable
-    sort makes any tombstone for key k beat every same-chunk insert of k,
-    and otherwise the last lane wins. Chunks apply oldest-first.
+    The write-buffer recency rule makes chunk boundaries invisible — every
+    lane applies in sequence and the later write wins, so an insert arriving
+    after a tombstone of the same key resurrects it even if both coalesce
+    into one flush batch (unlike the paper's in-batch tombstone-first rule).
+    Cleanup and flush are semantically invisible.
     """
-    if op[0] == "cleanup":
-        return  # cleanup is semantically invisible
+    if op[0] in ("cleanup", "flush"):
+        return
     _, keys, vals, dels = op
-    keys = [int(k) for k in keys]
-    for s in range(0, len(keys), batch_size):
-        ck = keys[s:s + batch_size]
-        cv = vals[s:s + batch_size]
-        cd = dels[s:s + batch_size]
-        for k in dict.fromkeys(ck):
-            lanes = [i for i, kk in enumerate(ck) if kk == k]
-            if any(bool(cd[i]) for i in lanes):
-                oracle.pop(k, None)
-            else:
-                inserts = [i for i in lanes if not cd[i]]
-                oracle[k] = int(cv[inserts[-1]])
+    for k, v, d in zip(keys, vals, dels):
+        if bool(d):
+            oracle.pop(int(k), None)
+        else:
+            oracle[int(k)] = int(v)
 
 
 def query_ranges(pool):
@@ -130,7 +136,8 @@ def check_vs_oracle(name: str, d, oracle: dict, query_keys, k1, k2, plan: QueryP
         err_msg=f"{name}: lookup values",
     )
     assert int(d.size()) == len(oracle), (
-        f"{name}: size() = {int(d.size())}, oracle has {len(oracle)}"
+        f"{name}: size() = {int(d.size())}, oracle has {len(oracle)} "
+        "(write-buffer residents must be counted)"
     )
 
     counts, ok = d.count(k1, k2, plan)
@@ -158,26 +165,29 @@ def check_vs_oracle(name: str, d, oracle: dict, query_keys, k1, k2, plan: QueryP
     return rkeys, rvals, rcounts
 
 
-def run_differential(dicts: dict, ops, *, batch_size: int, plan: QueryPlan,
+def run_differential(dicts: dict, ops, *, plan: QueryPlan,
                      query_keys, k1, k2, check_every: int = 1):
     """Replay `ops` on every handle in `dicts` ({name: Dictionary}).
 
     After each op (or every `check_every` ops, and always after the last),
     every backend is checked against the oracle and the backends' raw range
     outputs are checked against each other (identical arrays incl. padding).
-    Returns the final handles.
+    Checks between an update and its (explicit or overflow) flush pin the
+    buffer-resident visibility contract. Returns the final handles.
     """
     oracle: dict = {}
     for step, op in enumerate(ops):
         if op[0] == "cleanup":
             dicts = {name: d.cleanup() for name, d in dicts.items()}
+        elif op[0] == "flush":
+            dicts = {name: d.flush() for name, d in dicts.items()}
         else:
             _, keys, vals, dels = op
             dicts = {
                 name: d.update(keys, vals, is_delete=dels)
                 for name, d in dicts.items()
             }
-        oracle_apply(oracle, op, batch_size)
+        oracle_apply(oracle, op)
 
         if step % check_every and step != len(ops) - 1:
             continue

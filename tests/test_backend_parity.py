@@ -2,10 +2,13 @@
 
 Every backend with the full capability row must be *the same dictionary*
 behind the facade: identical lookup / size / count / range answers (down to
-range-row placebo padding) on randomized op sequences with duplicate keys,
-tombstone churn, and boundary keys at 0 / MAX_USER_KEY / shard boundaries —
-all checked against a Python-dict oracle that models the facade's chunk
-semantics exactly (tests/harness.py).
+range-row placebo padding) on randomized op sequences with ragged
+(non-multiple-of-b) lengths, duplicate keys, tombstone churn, explicit and
+implicit (overflow) write-buffer flushes, and boundary keys at 0 /
+MAX_USER_KEY / shard boundaries — all checked against a Python-dict oracle
+that models the write-buffer recency rule exactly (tests/harness.py), with
+buffer-resident elements and tombstones visible to every query before any
+flush.
 
 The sharded backend runs at 1 / 2 / 4 shards on spoofed CPU devices
 (conftest forces --xla_force_host_platform_device_count=4 before jax
@@ -83,7 +86,7 @@ class TestDifferentialParity:
         k1, k2 = query_ranges(pool)
         run_differential(
             _make_backends(num_shards), ops,
-            batch_size=B, plan=PLAN, query_keys=_queries(pool), k1=k1, k2=k2,
+            plan=PLAN, query_keys=_queries(pool), k1=k1, k2=k2,
         )
 
     @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
@@ -103,7 +106,7 @@ class TestDifferentialParity:
         k1, k2 = query_ranges(bks)
         run_differential(
             _make_backends(num_shards), ops,
-            batch_size=B, plan=PLAN, query_keys=_queries(bks), k1=k1, k2=k2,
+            plan=PLAN, query_keys=_queries(bks), k1=k1, k2=k2,
         )
 
     @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
@@ -117,7 +120,7 @@ class TestDifferentialParity:
         k1, k2 = query_ranges(pool)
         run_differential(
             _make_backends(num_shards), ops,
-            batch_size=B, plan=PLAN, query_keys=_queries(pool), k1=k1, k2=k2,
+            plan=PLAN, query_keys=_queries(pool), k1=k1, k2=k2,
         )
 
     @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
@@ -232,17 +235,149 @@ class TestShardedFacadeMechanics:
 
     @_needs_devices(4)
     def test_overflow_latches_across_shards(self):
+        # All keys land in shard 0: its buffer (4 slots) + its one batch slot
+        # absorb 8 elements; the 9th forces a flush past the slot budget.
         d = Dictionary.create("lsm_sharded", batch_size=4, num_levels=1, num_shards=4)
         d = d.insert(np.array([1, 2, 3, 4]), np.zeros(4, np.int32))
         assert not bool(d.overflowed())
         d = d.insert(np.array([5, 6, 7, 8]), np.zeros(4, np.int32))
-        assert bool(d.overflowed())  # every shard's counter ticked past max
+        assert not bool(d.overflowed())  # write-buffer grace on shard 0
+        d = d.insert(np.array([9]), np.zeros(1, np.int32))
+        assert bool(d.overflowed())
 
     def test_bulk_build_capacity_check(self):
         d = Dictionary.create("lsm_sharded", batch_size=4, num_levels=1, num_shards=1)
         keys = np.arange(5, dtype=np.int64)
         with pytest.raises(ValueError, match="capacity"):
             d.bulk_build(keys, keys.astype(np.int32))
+
+
+class TestWriteBuffer:
+    """The staging buffer ("level −1"): pre-flush visibility, slot
+    accounting, explicit/threshold flushes, masked lanes."""
+
+    @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
+    def test_buffer_tombstones_visible_before_flush(self, num_shards):
+        """A tombstone that is still buffer-resident must hide an older,
+        already-flushed insert from lookup/count/range/size."""
+        bks = boundary_keys()[:6]
+        keys = np.array(bks, dtype=np.int64)
+        vals = np.arange(len(keys), dtype=np.int32) + 1
+        for name, d in _make_backends(num_shards).items():
+            d = d.insert(keys, vals).flush()          # all keys in the levels
+            d = d.delete(keys[::2])                   # tombstones staged only
+            f, _ = d.lookup(keys)
+            exp = np.ones(len(keys), bool)
+            exp[::2] = False
+            np.testing.assert_array_equal(np.asarray(f), exp, err_msg=name)
+            assert int(d.size()) == len(keys) - len(keys[::2]), name
+            c, ok = d.count(
+                np.array([0]), np.array([sem.MAX_USER_KEY]), PLAN
+            )
+            assert bool(np.asarray(ok)[0]) and int(np.asarray(c)[0]) == len(keys[1::2]), name
+            rk, _, rc, rok = d.range(
+                np.array([0]), np.array([sem.MAX_USER_KEY]), PLAN
+            )
+            assert bool(np.asarray(rok)[0]), name
+            got = np.asarray(rk)[0, : int(np.asarray(rc)[0])].tolist()
+            assert got == sorted(int(k) for k in keys[1::2]), name
+
+    def test_sub_batch_slot_accounting(self):
+        """N size-1 inserts consume floor((N-1)/b) batch slots — not N — and
+        r*b + pending always equals the number of staged elements."""
+        d = Dictionary.create("lsm", batch_size=B, num_levels=NUM_LEVELS)
+        for i in range(1, 3 * B + 2):
+            d = d.insert(np.array([i]), np.array([i]))
+            assert int(d.state.r) == (i - 1) // B, i
+            assert int(d.state.r) * B + int(d.pending()) == i, i
+        f, _ = d.lookup(np.arange(1, 3 * B + 2))
+        assert bool(np.asarray(f).all())
+
+    @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
+    def test_explicit_flush_is_query_transparent(self, num_shards):
+        keys = np.array(boundary_keys()[:5], dtype=np.int64)
+        q = _queries(keys)
+        k1, k2 = query_ranges(keys)
+        for name, d in _make_backends(num_shards).items():
+            d = d.insert(keys, (keys % 97).astype(np.int32))
+            before = [np.asarray(x) for x in (*d.lookup(q), d.size())]
+            flushed = d.flush()
+            assert int(flushed.pending()) == 0, name
+            after = [np.asarray(x) for x in (*flushed.lookup(q), flushed.size())]
+            for a, b_ in zip(before, after):
+                np.testing.assert_array_equal(a, b_, err_msg=name)
+            # idempotent: flushing an empty buffer is a no-op (capture r
+            # first — flush() donates the receiving handle's buffers)
+            r_before = int(flushed.state.r) if name == "lsm" else None
+            again = flushed.flush()
+            assert int(again.pending()) == 0, name
+            if name == "lsm":
+                assert int(again.state.r) == r_before, name
+
+    def test_flush_threshold_policy(self):
+        # threshold=1 restores the old pad-every-call slot profile
+        d1 = Dictionary.create(
+            "lsm", batch_size=B, num_levels=NUM_LEVELS, flush_threshold=1
+        )
+        for i in range(3):
+            d1 = d1.insert(np.array([i]), np.array([i]))
+            assert int(d1.pending()) == 0
+            assert int(d1.state.r) == i + 1
+        # threshold=B flushes only once the buffer is exactly full
+        dB = Dictionary.create(
+            "lsm", batch_size=B, num_levels=NUM_LEVELS, flush_threshold=B
+        )
+        for i in range(B - 1):
+            dB = dB.insert(np.array([i]), np.array([i]))
+        assert int(dB.pending()) == B - 1 and int(dB.state.r) == 0
+        dB = dB.insert(np.array([B - 1]), np.array([B - 1]))
+        assert int(dB.pending()) == 0 and int(dB.state.r) == 1
+        with pytest.raises(ValueError, match="flush_threshold"):
+            Dictionary.create("lsm", batch_size=B, num_levels=3, flush_threshold=B + 1)
+
+    @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
+    def test_masked_lanes_do_not_occupy_buffer_slots(self, num_shards):
+        rs = range_size(num_shards)
+        keys = np.array([1, 2, rs, rs + 1, 2 * rs, 3], dtype=np.int64)
+        keys = np.clip(keys, 0, sem.MAX_USER_KEY)
+        valid = np.array([True, False, True, False, True, False])
+        for name, d in _make_backends(num_shards).items():
+            d = d.update(keys, np.arange(6, dtype=np.int32), valid=valid)
+            assert int(d.pending()) in (0, 3), name  # 0 for sorted_array
+            if name != "sorted_array":
+                assert int(d.pending()) == 3, name
+            assert int(d.size()) == len(np.unique(keys[valid])), name
+            f, _ = d.lookup(keys)
+            np.testing.assert_array_equal(
+                np.asarray(f),
+                np.array([k in set(keys[valid].tolist()) for k in keys.tolist()]),
+                err_msg=name,
+            )
+
+    @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
+    def test_mixed_update_with_masked_lanes_in_buffer(self, num_shards):
+        """is_delete + valid together: masked tombstones must not delete,
+        masked inserts must not appear, and nothing masked occupies the
+        buffer — the facade analogue of lsm_update_mixed against level −1."""
+        for name, d in _make_backends(num_shards).items():
+            d = d.insert(np.array([10, 20, 30]), np.array([1, 2, 3])).flush()
+            d = d.update(
+                np.array([10, 20, 40, 50]),
+                np.array([0, 0, 4, 5]),
+                is_delete=np.array([True, True, False, False]),
+                valid=np.array([True, False, True, False]),
+            )
+            f, v = d.lookup(np.array([10, 20, 30, 40, 50]))
+            np.testing.assert_array_equal(
+                np.asarray(f), [False, True, True, True, False], err_msg=name
+            )
+            np.testing.assert_array_equal(
+                np.where(np.asarray(f), np.asarray(v), 0), [0, 2, 3, 4, 0],
+                err_msg=name,
+            )
+            if name != "sorted_array":
+                assert int(d.pending()) == 2, name  # the tombstone + one insert
+            assert int(d.size()) == 3, name
 
 
 # ---------------------------------------------------------------------------
@@ -286,7 +421,7 @@ class TestHypothesisParity:
             k1, k2 = query_ranges(_POOL)
             run_differential(
                 _make_backends(num_shards), ops,
-                batch_size=B, plan=PLAN, query_keys=_queries(_POOL),
+                plan=PLAN, query_keys=_queries(_POOL),
                 k1=k1, k2=k2, check_every=2,
             )
 

@@ -127,6 +127,36 @@ class TestBackendParity:
         f, v = d.lookup(np.asarray([1, 2, 3, 4]))
         assert f.tolist() == [True, False, True, False]
         assert int(d.size()) == 2
+        # masked lanes are compacted away: they never occupy buffer slots
+        assert int(d.pending()) == 2
+
+    def test_recency_rule_tombstone_loses_to_later_insert(self):
+        """The write-buffer recency rule (docs/DESIGN.md §5): strict arrival
+        order decides duplicates even across the insert/tombstone status
+        boundary — unlike the paper's in-batch tombstone-first rule, which
+        still governs the direct core path (test_lsm_semantics item 6)."""
+        for backend in ("lsm", "sorted_array"):
+            d = _mk(backend).update(
+                np.asarray([5, 5]), np.asarray([0, 55]),
+                is_delete=np.asarray([True, False]),
+            )
+            f, v = d.lookup(np.asarray([5]))
+            assert bool(f[0]) and int(v[0]) == 55, backend
+            d = d.update(np.asarray([5, 5]), np.asarray([66, 0]),
+                         is_delete=np.asarray([False, True]))
+            assert not bool(d.lookup(np.asarray([5]))[0][0]), backend
+
+    def test_mixed_update_masked_lanes_skip_buffer(self):
+        d = _mk("lsm").insert(np.asarray([1, 2]), np.asarray([10, 20])).flush()
+        d = d.update(
+            np.asarray([1, 2, 3]), np.asarray([0, 0, 30]),
+            is_delete=np.asarray([True, True, False]),
+            valid=np.asarray([True, False, True]),
+        )
+        assert int(d.pending()) == 2  # staged: tombstone(1) + insert(3)
+        f, v = d.lookup(np.asarray([1, 2, 3]))
+        assert f.tolist() == [False, True, True]
+        assert int(d.size()) == 2
 
 
 class TestCapabilities:
@@ -234,16 +264,30 @@ class TestKeyDomain:
 
 class TestQueryPlan:
     def test_auto_plan_is_exact_for_small_dictionaries(self):
-        p = QueryPlan().resolved(capacity=248)
+        p = QueryPlan().resolved(248)
         assert p.max_candidates == 248 and p.max_results == 248
 
     def test_auto_plan_bounds_large_dictionaries(self):
-        p = QueryPlan().resolved(capacity=1 << 20)
+        p = QueryPlan().resolved(1 << 20)
         assert 4096 <= p.max_candidates < (1 << 20)
 
     def test_explicit_plan_overrides(self):
-        p = QueryPlan(max_candidates=7, max_results=3).resolved(capacity=1 << 20)
+        p = QueryPlan(max_candidates=7, max_results=3).resolved(1 << 20)
         assert (p.max_candidates, p.max_results) == (7, 3)
+
+    def test_plan_bound_covers_write_buffer_residents(self):
+        """Regression: clamping plans to bare capacity made a full structure
+        plus buffer residents permanently inexact — no explicit plan could
+        restore ok=True. The bound must include the buffer slots."""
+        d = Dictionary.create("lsm", batch_size=4, num_levels=1)  # capacity 4
+        keys = np.arange(8, dtype=np.int32)
+        d = d.insert(keys, keys)  # 4 flushed into the level + 4 buffer-resident
+        assert not bool(d.overflowed())
+        counts, ok = d.count(np.asarray([0]), np.asarray([7]))  # auto plan
+        assert bool(ok[0]) and int(counts[0]) == 8
+        counts, ok = d.count(np.asarray([0]), np.asarray([7]),
+                             QueryPlan(max_candidates=8))  # explicit, unclamped
+        assert bool(ok[0]) and int(counts[0]) == 8
 
     def test_truncation_is_flagged_not_silent(self):
         keys = np.arange(64, dtype=np.int32)
@@ -311,7 +355,12 @@ class TestFacadeMechanics:
 
     def test_overflow_is_latched_not_silent(self):
         d = Dictionary.create("lsm", batch_size=4, num_levels=1)  # capacity 4
-        d = d.insert(np.asarray([1, 2, 3, 4]), np.zeros(4, np.int32))
+        d = d.insert(np.asarray([1, 2, 3, 4]), np.zeros(4, np.int32))  # staged only
         assert not bool(d.overflowed())
+        # Flushes the first batch (r -> max) and stages the second: the write
+        # buffer grants up to b elements of grace beyond the level arenas.
         d = d.insert(np.asarray([5, 6, 7, 8]), np.zeros(4, np.int32))
+        assert not bool(d.overflowed())
+        # One more element forces a flush past the last batch slot: latched.
+        d = d.insert(np.asarray([9]), np.zeros(1, np.int32))
         assert bool(d.overflowed())

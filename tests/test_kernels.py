@@ -110,6 +110,45 @@ def test_lower_bound_streamed_hits_every_boundary():
     np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
 
 
+@pytest.mark.parametrize("n,q", [(2048, 256), (4096, 512)])
+def test_upper_bound_dispatch_uses_lower_bound_kernel(n, q):
+    """ops.upper_bound(k) == lower_bound(k+1) through the Pallas kernel must
+    match the reference, including duplicate runs, the INT32_MAX guard lane,
+    and placebo-tail keys."""
+    keys = np.sort(RNG.integers(0, 1 << 16, n - 256)).astype(np.int32)
+    keys = np.concatenate([keys, np.full(256, sem.PLACEBO_KEY, np.int32)])  # placebo tail
+    queries = RNG.integers(0, 1 << 16, q).astype(np.int32)
+    queries[:4] = [0, sem.MAX_USER_KEY, sem.PLACEBO_KEY, np.iinfo(np.int32).max]
+    r = ref.upper_bound_ref(jnp.array(keys), jnp.array(queries))
+    ops.set_backend("pallas")
+    try:
+        p = ops.upper_bound(jnp.array(keys), jnp.array(queries))
+    finally:
+        ops.set_backend("xla")
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+
+
+def test_sort_pairs_recency_newest_first_within_equal_keys():
+    """The write-buffer batch-formation rule: ascending original key, later
+    lane first within equal keys (even across the status-bit boundary),
+    placebos last."""
+    kv = jnp.array([
+        (5 << 1) | 1,   # lane 0: insert 5
+        (3 << 1) | 1,   # lane 1: insert 3
+        (5 << 1) | 0,   # lane 2: tombstone 5 (newer than lane 0)
+        sem.PLACEBO_KV, # lane 3: padding
+        (5 << 1) | 1,   # lane 4: insert 5 (newest)
+    ], jnp.int32)
+    val = jnp.array([50, 30, 0, 0, 55], jnp.int32)
+    skv, sval = ops.sort_pairs_recency(kv, val)
+    np.testing.assert_array_equal(
+        np.asarray(sem.original_key(skv)), [3, 5, 5, 5, sem.PLACEBO_KEY]
+    )
+    # within the key-5 segment: lane 4 (insert 55), lane 2 (tombstone), lane 0
+    np.testing.assert_array_equal(np.asarray(sval[1:4]), [55, 0, 50])
+    assert bool(sem.is_tombstone(skv[2:3])[0])
+
+
 # ---------------------------------------------------------------------------
 # ops dispatch: pallas backend end-to-end through the LSM
 # ---------------------------------------------------------------------------

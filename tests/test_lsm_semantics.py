@@ -153,6 +153,99 @@ def test_cleanup_of_empty_lsm():
     assert not bool(found[0])
 
 
+def test_stage_flush_core_write_buffer():
+    """lsm_stage absorbs sub-batches without consuming a slot; duplicates
+    resolve by arrival order (a later tombstone deletes, a later insert
+    resurrects); lsm_flush pushes the buffer down query-transparently."""
+    from repro.core import lsm_stage, lsm_flush
+
+    state = lsm_init(CFG)
+    # lanes: insert 3, insert 5, insert 9, tombstone 5 (later -> 5 deleted)
+    keys = np.array([3, 5, 9, 5, 0, 0, 0, 0])
+    dels = np.array([0, 0, 0, 1, 0, 0, 0, 0], dtype=bool)
+    kv = np.where(np.arange(8) < 4, np.asarray(sem.encode(keys, dels)), sem.PLACEBO_KV)
+    vals = np.array([30, 50, 90, 0, 0, 0, 0, 0], dtype=np.int32)
+    state = lsm_stage(CFG, state, jnp.asarray(kv), jnp.asarray(vals), 4)
+    assert int(state.buf_n) == 4 and int(state.r) == 0
+    found, vals_out = lsm_lookup(CFG, state, jnp.array([3, 5, 9]))
+    np.testing.assert_array_equal(found, [True, False, True])
+    # a later staged insert resurrects the tombstoned key (recency rule)
+    kv2 = np.full(8, sem.PLACEBO_KV, np.int32)
+    kv2[0] = int(sem.encode_insert(jnp.array([5]))[0])
+    v2 = np.zeros(8, np.int32)
+    v2[0] = 55
+    state = lsm_stage(CFG, state, jnp.asarray(kv2), jnp.asarray(v2), 1)
+    found, vals_out = lsm_lookup(CFG, state, jnp.array([5]))
+    assert bool(found[0]) and int(vals_out[0]) == 55
+    before = lsm_lookup(CFG, state, jnp.array([3, 5, 9, 42]))
+    state = lsm_flush(CFG, state)
+    assert int(state.buf_n) == 0 and int(state.r) == 1
+    after = lsm_lookup(CFG, state, jnp.array([3, 5, 9, 42]))
+    np.testing.assert_array_equal(np.asarray(before[0]), np.asarray(after[0]))
+    np.testing.assert_array_equal(np.asarray(before[1]), np.asarray(after[1]))
+
+
+def test_stage_overflow_flushes_oldest_and_retains_newest():
+    from repro.core import lsm_stage
+
+    state = lsm_init(CFG)
+    for i in range(3):  # 3 full-width stages of 8: last one keeps 8 pending
+        keys = np.arange(8) + 8 * i
+        kv = np.asarray(sem.encode_insert(jnp.asarray(keys)))
+        state = lsm_stage(CFG, state, jnp.asarray(kv), jnp.arange(8) + 8 * i, 8)
+    assert int(state.buf_n) == 8 and int(state.r) == 2
+    found, vals = lsm_lookup(CFG, state, jnp.arange(24))
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(vals), np.arange(24))
+
+
+def test_buffer_state_invariants():
+    """buf_seq is the explicit arrival-order witness (seq == position, b on
+    placebo lanes) and buf_sorted_* is the cached recency-sorted view —
+    staging, partial flushes, and full flushes must all maintain both."""
+    from repro.core import lsm_stage, lsm_flush, buffer_run
+    from repro.kernels import ops as kops
+
+    def check(state):
+        n = int(state.buf_n)
+        exp_seq = np.where(np.arange(8) < n, np.arange(8), 8)
+        np.testing.assert_array_equal(np.asarray(state.buf_seq), exp_seq)
+        skv, sval = kops.sort_pairs_recency(state.buf_kv, state.buf_val)
+        np.testing.assert_array_equal(np.asarray(state.buf_sorted_kv), np.asarray(skv))
+        np.testing.assert_array_equal(np.asarray(state.buf_sorted_val), np.asarray(sval))
+        bkv, bval = buffer_run(CFG, state)
+        np.testing.assert_array_equal(np.asarray(bkv), np.asarray(skv))
+
+    state = lsm_init(CFG)
+    check(state)
+    rng = np.random.default_rng(3)
+    for i in range(7):  # ragged stages: appends, partial retentions, flush
+        m = int(rng.integers(1, 9))
+        keys = rng.integers(0, 50, 8)
+        kv = np.where(np.arange(8) < m, np.asarray(sem.encode_insert(jnp.asarray(keys))),
+                      sem.PLACEBO_KV)
+        state = lsm_stage(CFG, state, jnp.asarray(kv), jnp.asarray(keys % 7), m)
+        check(state)
+    state = lsm_flush(CFG, state)
+    check(state)
+    assert int(state.buf_n) == 0
+
+
+def test_compact_real_masks_lanes_out_of_the_buffer():
+    from repro.core import compact_real, lsm_stage
+
+    kv = np.asarray(sem.encode_insert(jnp.arange(8)))
+    mask = np.array([1, 0, 1, 0, 1, 0, 1, 0], dtype=bool)
+    out_kv, out_val, cnt = compact_real(jnp.asarray(kv), jnp.arange(8), jnp.asarray(mask))
+    assert int(cnt) == 4
+    np.testing.assert_array_equal(
+        np.asarray(sem.original_key(out_kv))[:4], [0, 2, 4, 6]
+    )
+    assert (np.asarray(out_kv)[4:] == sem.PLACEBO_KV).all()
+    state = lsm_stage(CFG, lsm_init(CFG), out_kv, out_val, cnt)
+    assert int(state.buf_n) == 4  # masked lanes never occupy buffer slots
+
+
 def test_update_is_jittable_and_matches_eager():
     import functools
 

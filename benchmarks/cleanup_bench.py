@@ -1,9 +1,13 @@
 """Paper §5.4: cleanup throughput vs removal fraction, cleanup vs rebuild,
-and the query-speedup-after-cleanup experiment."""
+the query-speedup-after-cleanup experiment — plus the sustained-churn
+latency comparison of stop-the-world `cleanup()` against budgeted
+`maintain()` (ISSUE 7: p50 should match, p99 should collapse because the
+maintenance slice is bounded while the periodic cleanup is O(capacity))."""
 
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +22,7 @@ from repro.core import (
     lsm_init,
     lsm_insert,
     lsm_lookup,
+    lsm_maintain,
 )
 
 
@@ -66,6 +71,66 @@ def run(log_n: int = 18, log_b: int = 14) -> None:
     emit("cleanup/query_speedup", t_after,
          f"lookup_before={t_before * 1e3:.1f}ms after={t_after * 1e3:.1f}ms "
          f"speedup={t_before / t_after:.2f}x")
+
+    _churn(log_b=min(log_b, 11))
+
+
+def _churn(log_b: int = 11, steps: int = 32, cleanup_every: int = 8) -> None:
+    """Sustained update churn: per-step latency under two compaction regimes.
+
+    Each step applies one full insert batch from a small key space (heavy
+    cross-batch shadowing) followed by the regime's compaction work:
+
+      * 'cleanup'  — stop-the-world `lsm_cleanup` every `cleanup_every`
+        steps (the paper's only option): most steps are cheap, but the
+        cleanup step rebuilds O(capacity) elements -> a p99 spike;
+      * 'maintain' — `lsm_maintain(3b)` every step: bounded incremental
+        slices keep every step's cost flat.
+
+    Both regimes see the SAME key sequence; queries stay exact throughout
+    (the differential harness owns that proof — this bench only times it).
+    """
+    b = 1 << log_b
+    num_levels = 5  # capacity 31 * b
+    cfg = LSMConfig(batch_size=b, num_levels=num_levels)
+    key_space = 4 * b  # ~every key rewritten every 4 batches
+    rng = np.random.default_rng(11)
+    batches = [rng.choice(key_space, b, replace=False).astype(np.int32)
+               for _ in range(steps)]
+
+    ins = jax.jit(functools.partial(lsm_insert, cfg), donate_argnums=0)
+    clean = jax.jit(functools.partial(lsm_cleanup, cfg), donate_argnums=0)
+    maint = jax.jit(functools.partial(lsm_maintain, cfg, budget=3 * b),
+                    donate_argnums=0)
+
+    def run_regime(compact_step):
+        # Two full replays: the first warms every executable involved so
+        # compile time stays out of the latency distribution; the second's
+        # per-step timings are what we report.
+        for trial in range(2):
+            state = lsm_init(cfg)
+            lat = []
+            for i, keys in enumerate(batches):
+                t0 = time.perf_counter()
+                state = ins(state, jnp.asarray(keys), jnp.asarray(keys % 997))
+                state = compact_step(state, i)
+                jax.block_until_ready(state)
+                lat.append(time.perf_counter() - t0)
+        return np.array(lat)
+
+    lat_cl = run_regime(
+        lambda st, i: clean(st) if (i + 1) % cleanup_every == 0 else st
+    )
+    lat_mt = run_regime(lambda st, i: maint(st))
+
+    for tag, lat in (("cleanup", lat_cl), ("maintain", lat_mt)):
+        p50, p99 = np.percentile(lat, 50), np.percentile(lat, 99)
+        emit(f"churn/{tag}_p50", float(p50), f"{b / p50 / 1e6:.1f}Melem/s")
+        emit(f"churn/{tag}_p99", float(p99),
+             f"spread={p99 / p50:.1f}x (flat p99 = bounded maintenance)")
+    emit("churn/p99_ratio", float(np.percentile(lat_cl, 99)),
+         f"cleanup_p99/maintain_p99="
+         f"{np.percentile(lat_cl, 99) / np.percentile(lat_mt, 99):.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,13 @@
 """Kernel-level microbenchmarks: XLA reference path vs Pallas (interpret-mode
 numbers are NOT wall-time-meaningful on CPU — this bench times the XLA path
-and reports the Pallas kernels' roofline-derived expectations for v5e)."""
+and reports the Pallas kernels' roofline-derived expectations for v5e).
+
+The fused-lookup sweep (chunk size × DMA buffer depth) times the kernel in
+interpret mode: absolute numbers are CPU-interpreter proxies, but the
+*relative* ordering tracks launch/chunk bookkeeping overhead, and the v5e
+roofline rows give the real-hardware expectation per configuration. The
+sweep winner is what `lsm_lookup.FUSED_CHUNK` / `FUSED_DEPTH` encode; a row
+flags any drift between the recorded winner and the shipped defaults."""
 
 from __future__ import annotations
 
@@ -9,9 +16,47 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.kernels import ref
+from repro.kernels import lsm_lookup, ref
 
 HBM_BW = 819e9  # v5e bytes/s
+
+# Sweep grid for the fused multi-run lookup kernel.
+SWEEP_CHUNKS = (512, 1024, 2048)
+SWEEP_DEPTHS = (1, 2, 4)
+
+
+def _fused_sweep(rng, flat_n: int = 1 << 14, nq: int = 512) -> None:
+    """chunk × depth sweep of `fused_lookup_runs` (interpret mode)."""
+    flat_kv = jnp.asarray(
+        np.sort(rng.integers(0, 1 << 29, flat_n)).astype(np.int32)
+    )
+    flat_val = jnp.arange(flat_n, dtype=jnp.int32)
+    q = jnp.asarray(rng.integers(0, 1 << 28, nq).astype(np.int32))
+    results = {}
+    for chunk in SWEEP_CHUNKS:
+        for depth in SWEEP_DEPTHS:
+            fn = jax.jit(
+                lambda fk, fv, qq, c=chunk, d=depth: lsm_lookup.fused_lookup_runs(
+                    fk, fv, qq, chunk=c, query_block=256, depth=d, interpret=True
+                )
+            )
+            t = time_fn(fn, flat_kv, flat_val, q, warmup=1, iters=3)
+            results[(chunk, depth)] = t
+            # v5e roofline: one full stream of the [2, n] int32 operand per
+            # query block, overlapped across `depth` in-flight DMAs.
+            bytes_moved = (nq / 256) * 2 * flat_n * 4
+            emit(
+                f"kernel/fused_lookup_c{chunk}_d{depth}", t,
+                f"interpret-proxy; v5e_bound={nq / (bytes_moved / HBM_BW) / 1e6:.0f}Mq/s",
+            )
+    win_chunk, win_depth = min(results, key=results.get)
+    default = (lsm_lookup.FUSED_CHUNK, lsm_lookup.FUSED_DEPTH)
+    emit(
+        "kernel/fused_lookup_winner", results[(win_chunk, win_depth)],
+        f"chunk={win_chunk} depth={win_depth} "
+        f"defaults=c{default[0]}_d{default[1]} "
+        f"{'MATCH' if (win_chunk, win_depth) == default else 'DRIFT'}",
+    )
 
 
 def run(log_n: int = 20) -> None:
@@ -38,6 +83,18 @@ def run(log_n: int = 20) -> None:
     lb = jax.jit(ref.lower_bound_ref)
     t = time_fn(lb, a, q, warmup=1, iters=3)
     emit("kernel/lower_bound_xla", t, f"{q.shape[0] / t / 1e6:.1f}Mq/s")
+
+    # K-way cascade merge (XLA fold path) vs the pairwise-chain reference —
+    # the launch-count savings the fused merge_cascade kernel banks on TPU.
+    k_runs = [(jnp.asarray(np.sort(rng.integers(0, 1 << 29, n // 4)).astype(np.int32)),
+               jnp.arange(n // 4, dtype=jnp.int32)) for _ in range(4)]
+    casc = jax.jit(lambda *flat: ref.merge_cascade_ref(
+        list(flat[:4]), list(flat[4:])))
+    t = time_fn(casc, *[kv for kv, _ in k_runs], *[v for _, v in k_runs],
+                warmup=1, iters=3)
+    emit("kernel/merge_cascade4_xla", t, f"{n / t / 1e6:.1f}Melem/s")
+
+    _fused_sweep(rng, flat_n=min(n, 1 << 14))
 
 
 if __name__ == "__main__":

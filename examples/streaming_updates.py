@@ -2,8 +2,13 @@
 
 A moving-objects index (the paper's motivating use case): objects stream
 position updates (insert = overwrite), expire (delete), and a dashboard runs
-COUNT/RANGE window queries — all through the unified `Dictionary` facade,
-with a cleanup policy that triggers when stale elements exceed a threshold.
+COUNT/RANGE window queries — all through the unified `Dictionary` facade.
+Garbage collection is two-tier: every update piggybacks a *budgeted*
+incremental compaction (`maintenance_budget=` -> `maintain`, DESIGN.md §11)
+that runs only when the cheap levels have tracked compaction debt, and a
+stop-the-world `cleanup()` remains as the fallback policy for when stale
+elements still exceed a threshold (deep-level garbage the budget can't
+reach).
 
   PYTHONPATH=src python examples/streaming_updates.py
 """
@@ -20,7 +25,11 @@ GRID = 1 << 20          # 1M cell ids (e.g. quantized 2D positions)
 
 
 def main():
-    d = Dictionary.create("lsm", batch_size=B, num_levels=8)
+    # maintenance_budget: every update piggybacks maintain(3B) behind a
+    # traced debt check — levels 0..1 (capacity 3B) stay compacted without
+    # ever paying a stop-the-world cleanup on the update path.
+    d = Dictionary.create("lsm", batch_size=B, num_levels=8,
+                          maintenance_budget=3 * B)
     plan = QueryPlan(max_candidates=1 << 14)
     rng = np.random.default_rng(0)
 
@@ -47,11 +56,19 @@ def main():
             resident = int(d.state.r) * B + staged
             live = int(d.size())
             stale_frac = 1 - live / max(resident, 1)
+            debt = np.asarray(d.state.lvl_debt).tolist()
             print(f"step {step:2d}: windows={np.asarray(counts).tolist()} "
                   f"resident={resident} (staged={staged}) "
-                  f"live={live} stale={stale_frac:.0%}")
-            # cleanup policy: compact when >40% of the structure is stale
-            if stale_frac > 0.4:
+                  f"live={live} stale={stale_frac:.0%} debt={debt}")
+            # incremental tier: one bounded maintain sweep of the deepest
+            # affordable prefix (levels 0..2 at 7B) — latency O(budget), not
+            # O(capacity), so it is safe to run on every dashboard tick.
+            d = d.maintain(7 * B)
+            # fallback tier: full cleanup only when deep-level garbage the
+            # budget can't reach still dominates (>40% stale)
+            live = int(d.size())
+            resident = int(d.state.r) * B + int(d.pending())
+            if 1 - live / max(resident, 1) > 0.4:
                 d = d.cleanup()
                 print(f"         cleanup -> r={int(d.state.r)} "
                       f"({int(d.state.r) * B} resident)")

@@ -43,6 +43,7 @@ class Capabilities:
     supports_ordered_queries: bool  # COUNT / RANGE
     supports_cleanup: bool          # stale-element purge
     supports_bulk_build: bool = True
+    supports_maintenance: bool = False  # budgeted incremental compaction
 
 
 class Backend(abc.ABC):
@@ -147,6 +148,20 @@ class Backend(abc.ABC):
     def cleanup(self, state: BackendState) -> BackendState:
         raise CapabilityError(self._no("cleanup"))
 
+    def maintain_state(
+        self,
+        state: BackendState,
+        budget: int | None,
+        *,
+        only_if_debt: bool = False,
+    ) -> BackendState:
+        """Budgeted incremental compaction: reclaim stale elements touching at
+        most `budget` residents (STATIC int; None = full cleanup). Backends
+        that never accumulate stale elements return the state unchanged, so
+        maintenance is always safe to schedule."""
+        del budget, only_if_debt
+        return state
+
     @abc.abstractmethod
     def size(self, state: BackendState):
         """Live (visible) element count as an int32 scalar."""
@@ -174,6 +189,7 @@ def _op_supported(cls: Type[Backend], op: str) -> bool:
         "count": caps.supports_ordered_queries,
         "range": caps.supports_ordered_queries,
         "cleanup": caps.supports_cleanup,
+        "maintain": caps.supports_maintenance,
         "bulk_build": caps.supports_bulk_build,
         "lookup": True,
     }.get(op, False)

@@ -76,6 +76,7 @@ class LSMBackend(Backend):
         supports_deletes=True,
         supports_ordered_queries=True,
         supports_cleanup=True,
+        supports_maintenance=True,
     )
 
     cfg: LSMConfig
@@ -134,6 +135,11 @@ class LSMBackend(Backend):
     def cleanup(self, state):
         return lsm_cleanup_mod.lsm_cleanup(self.cfg, state)
 
+    def maintain_state(self, state, budget, *, only_if_debt=False):
+        return lsm_cleanup_mod.lsm_maintain(
+            self.cfg, state, budget, only_if_debt=only_if_debt
+        )
+
     def size(self, state):
         return queries.valid_count_runs(all_runs(self.cfg, state))
 
@@ -158,6 +164,7 @@ class ShardedLSMBackend(Backend):
         supports_deletes=True,
         supports_ordered_queries=True,
         supports_cleanup=True,
+        supports_maintenance=True,
     )
 
     cfg: dist.DistLSMConfig
@@ -249,6 +256,13 @@ class ShardedLSMBackend(Backend):
 
     def cleanup(self, state):
         return dist.dist_cleanup(self.cfg, self.mesh, state)
+
+    def maintain_state(self, state, budget, *, only_if_debt=False):
+        # Shard-local (zero-communication): `budget` bounds each shard's
+        # compaction independently, mirroring dist_cleanup's locality.
+        return dist.dist_maintain(
+            self.cfg, self.mesh, state, budget, only_if_debt=only_if_debt
+        )
 
     def size(self, state):
         return dist.dist_size(self.cfg, self.mesh, state)

@@ -75,7 +75,8 @@ def _cached_exec(backend: Backend, op: str, fn, *, donate_state: bool = False, s
 # -- op bodies (backend bound statically via the cache) -----------------------
 
 
-def _exec_update(backend, flush_threshold, state, keys, values, is_delete, valid):
+def _exec_update(backend, flush_threshold, maintenance_budget, state, keys,
+                 values, is_delete, valid):
     """Encode, front-compact, pad to k*b, and stage the sub-batches (scan
     when k > 1), then apply the optional flush-threshold policy.
 
@@ -121,11 +122,18 @@ def _exec_update(backend, flush_threshold, state, keys, values, is_delete, valid
         state, _ = jax.lax.scan(body, state, (kv, vals, counts))
     if flush_threshold is not None:
         state = backend.flush_state(state, flush_threshold)
+    if maintenance_budget is not None:
+        # Piggybacked budgeted compaction: only_if_debt gates the work behind
+        # a traced prefix-debt check, so debt-free updates pay one comparison.
+        state = backend.maintain_state(state, maintenance_budget, only_if_debt=True)
     return state
 
 
-def _exec_flush(backend, state):
-    return backend.flush_state(state)
+def _exec_flush(backend, maintenance_budget, state):
+    state = backend.flush_state(state)
+    if maintenance_budget is not None:
+        state = backend.maintain_state(state, maintenance_budget, only_if_debt=True)
+    return state
 
 
 def _exec_pending(backend, state):
@@ -150,6 +158,10 @@ def _exec_range(backend, plan, state, k1, k2):
 
 def _exec_cleanup(backend, state):
     return backend.cleanup(state)
+
+
+def _exec_maintain(backend, budget, state):
+    return backend.maintain_state(state, budget)
 
 
 def _exec_size(backend, state):
@@ -207,20 +219,24 @@ class Dictionary:
     and donate the old one's buffers — keep only the returned handle.
     """
 
-    __slots__ = ("_backend", "_state", "_validate", "_flush_threshold")
+    __slots__ = ("_backend", "_state", "_validate", "_flush_threshold",
+                 "_maintenance_budget")
 
     def __init__(self, backend: Backend, state, validate: bool = True,
-                 flush_threshold: Optional[int] = None):
+                 flush_threshold: Optional[int] = None,
+                 maintenance_budget: Optional[int] = None):
         self._backend = backend
         self._state = state
         self._validate = validate
         self._flush_threshold = flush_threshold
+        self._maintenance_budget = maintenance_budget
 
     # -- construction --------------------------------------------------------
 
     @classmethod
     def create(cls, backend: str = "lsm", validate: bool = True,
-               flush_threshold: Optional[int] = None, **options) -> "Dictionary":
+               flush_threshold: Optional[int] = None,
+               maintenance_budget: Optional[int] = None, **options) -> "Dictionary":
         """Empty dictionary:
         `create("lsm"|"lsm_sharded"|"sorted_array"|"cuckoo", ...)`.
 
@@ -236,6 +252,14 @@ class Dictionary:
         main structure (1 = flush every call, the old pad-every-call
         latency/slot profile). Default None: buffers flush only on overflow,
         explicit `flush()`, or `cleanup()`.
+
+        `maintenance_budget` (maintenance-capable backends): piggyback
+        budgeted incremental compaction on every update/flush — at most
+        `maintenance_budget` resident elements are touched per call, and a
+        traced debt check skips the work entirely when there is nothing to
+        reclaim. This keeps stale-element debt bounded without the
+        stop-the-world `cleanup()` latency spike. `maintain()` can also be
+        called explicitly at any time.
         """
         be = get_backend_class(backend).from_options(**options)
         if flush_threshold is not None:
@@ -245,7 +269,14 @@ class Dictionary:
                     f"flush_threshold must be in [1, batch_size={be.batch_size}], got {t}"
                 )
             flush_threshold = t
-        return cls(be, be.init(), validate, flush_threshold)
+        if maintenance_budget is not None:
+            if not be.caps.supports_maintenance:
+                raise CapabilityError(be._no("maintain"))
+            m = int(maintenance_budget)
+            if m < 1:
+                raise ValueError(f"maintenance_budget must be >= 1, got {m}")
+            maintenance_budget = m
+        return cls(be, be.init(), validate, flush_threshold, maintenance_budget)
 
     # -- static introspection ------------------------------------------------
 
@@ -288,7 +319,8 @@ class Dictionary:
             raise CapabilityError(self._backend._no(op))
 
     def _evolve(self, new_state) -> "Dictionary":
-        return Dictionary(self._backend, new_state, self._validate, self._flush_threshold)
+        return Dictionary(self._backend, new_state, self._validate,
+                          self._flush_threshold, self._maintenance_budget)
 
     # -- updates -------------------------------------------------------------
 
@@ -338,7 +370,8 @@ class Dictionary:
 
         f = _cached_exec(
             self._backend, "update", _exec_update,
-            donate_state=True, statics=(self._flush_threshold,),
+            donate_state=True,
+            statics=(self._flush_threshold, self._maintenance_budget),
         )
         new_state = f(self._state, keys, values, is_delete, valid)
         return self._evolve(new_state)
@@ -384,6 +417,32 @@ class Dictionary:
         f = _cached_exec(self._backend, "cleanup", _exec_cleanup, donate_state=True)
         return self._evolve(f(self._state))
 
+    def maintain(self, budget: Optional[int] = None) -> "Dictionary":
+        """Budgeted incremental compaction: reclaim stale elements touching at
+        most `budget` residents (STATIC Python int; each distinct budget
+        compiles one executable).
+
+        Precedence: an explicit `budget` wins; otherwise the handle's
+        configured `maintenance_budget`; otherwise None — which degrades to a
+        full `cleanup()` (maintain(∞) IS cleanup, minus the buffer fold).
+        Queries are exact at every budget level — maintenance is
+        observationally invisible. Sharded backends maintain shard-locally
+        (zero communication; the budget bounds each shard independently).
+        Returns the new handle (the old one's buffers are donated).
+        """
+        self._require("maintain", self._backend.caps.supports_maintenance)
+        if budget is None:
+            budget = self._maintenance_budget
+        else:
+            budget = int(budget)
+            if budget < 1:
+                raise ValueError(f"maintain budget must be >= 1, got {budget}")
+        f = _cached_exec(
+            self._backend, "maintain", _exec_maintain,
+            donate_state=True, statics=(budget,),
+        )
+        return self._evolve(f(self._state))
+
     def flush(self) -> "Dictionary":
         """Push staged (write-buffer) updates into the main structure.
 
@@ -391,7 +450,10 @@ class Dictionary:
         partial buffer is placebo-padded to a full batch, consuming one batch
         slot — the cost the coalescing update path defers. Returns the new
         handle (the old one's buffers are donated)."""
-        f = _cached_exec(self._backend, "flush", _exec_flush, donate_state=True)
+        f = _cached_exec(
+            self._backend, "flush", _exec_flush,
+            donate_state=True, statics=(self._maintenance_budget,),
+        )
         return self._evolve(f(self._state))
 
     def pending(self):
@@ -454,16 +516,19 @@ class Dictionary:
 
 
 def _dict_flatten(d: Dictionary):
-    return (d._state,), (d._backend, d._validate, d._flush_threshold)
+    return (d._state,), (
+        d._backend, d._validate, d._flush_threshold, d._maintenance_budget
+    )
 
 
 def _dict_unflatten(aux, children):
-    backend, validate, flush_threshold = aux
+    backend, validate, flush_threshold, maintenance_budget = aux
     obj = object.__new__(Dictionary)
     object.__setattr__(obj, "_backend", backend)
     object.__setattr__(obj, "_state", children[0])
     object.__setattr__(obj, "_validate", validate)
     object.__setattr__(obj, "_flush_threshold", flush_threshold)
+    object.__setattr__(obj, "_maintenance_budget", maintenance_budget)
     return obj
 
 

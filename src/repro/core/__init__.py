@@ -12,6 +12,7 @@ from repro.core.lsm import (  # noqa: F401
     lsm_update_mixed,
     lsm_bulk_build,
     lsm_num_elements,
+    lsm_debt,
     level_runs,
     level_view,
     buffer_run,
@@ -26,4 +27,4 @@ from repro.core.queries import (  # noqa: F401
     count_runs,
     range_runs,
 )
-from repro.core.cleanup import lsm_cleanup, lsm_valid_count  # noqa: F401
+from repro.core.cleanup import lsm_cleanup, lsm_maintain, lsm_valid_count  # noqa: F401

@@ -55,7 +55,7 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core import semantics as sem
-from repro.core.cleanup import lsm_cleanup
+from repro.core.cleanup import lsm_cleanup, lsm_maintain
 from repro.core.lsm import (
     LSMConfig,
     LSMState,
@@ -336,6 +336,31 @@ def dist_cleanup(cfg: DistLSMConfig, mesh, states) -> LSMState:
     return f(states)
 
 
+def dist_maintain(
+    cfg: DistLSMConfig,
+    mesh,
+    states,
+    budget: int | None = None,
+    *,
+    only_if_debt: bool = False,
+) -> LSMState:
+    """Shard-local budgeted maintenance — zero communication, same as
+    cleanup/flush. `budget` is the PER-SHARD element budget (static); shards
+    carry independent debt (ownership skew), so each compacts — or skips, with
+    only_if_debt — on its own schedule."""
+    state_spec = P(cfg.axis)
+
+    def body(states):
+        return _restack(
+            lsm_maintain(cfg.local, _local_state(states), budget,
+                         only_if_debt=only_if_debt)
+        )
+
+    f = shard_map(body, mesh=mesh, in_specs=(state_spec,), out_specs=state_spec,
+                  check_vma=False)
+    return f(states)
+
+
 def dist_size(cfg: DistLSMConfig, mesh, states):
     """Live (visible) element count across all shards, int32 scalar.
 
@@ -391,6 +416,7 @@ def dist_bulk_build(cfg: DistLSMConfig, mesh, keys, values) -> LSMState:
         st = LSMState(
             key_vars=kvs, values=vals, r=r_new,
             overflowed=jnp.zeros((), dtype=bool),
+            lvl_debt=jnp.zeros((cfg.local.num_levels,), dtype=jnp.int32),
             **_fresh_buffer(b),
         )
         return _restack(st)
@@ -432,6 +458,14 @@ def make_dist_range(cfg: DistLSMConfig, mesh, max_candidates: int, max_results: 
 def make_dist_cleanup(cfg: DistLSMConfig, mesh):
     """Shard-local cleanup — zero communication."""
     return jax.jit(functools.partial(dist_cleanup, cfg, mesh), donate_argnums=0)
+
+
+def make_dist_maintain(cfg: DistLSMConfig, mesh, budget: int | None = None):
+    """Returns jitted maintain(states) -> states (shard-local, zero comm)."""
+    return jax.jit(
+        functools.partial(dist_maintain, cfg, mesh, budget=budget),
+        donate_argnums=0,
+    )
 
 
 def make_dist_stage(cfg: DistLSMConfig, mesh):

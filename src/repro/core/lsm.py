@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import semantics as sem
+from repro.core import cascade
 from repro.kernels import ops
 
 
@@ -99,6 +100,12 @@ class LSMState(NamedTuple):
     # O(b log b) sort is paid once per stage/flush, not once per query.
     buf_sorted_kv: jax.Array         # int32[b]
     buf_sorted_val: jax.Array        # int32[b]
+    # Compaction debt: per-level estimate of reclaimable (stale) residents,
+    # measured on each run as a cascade step materializes it
+    # (cascade.run_stale_count) and consumed by budgeted maintenance
+    # (cleanup.lsm_maintain). A scheduling signal only — queries never read
+    # it, and results are exact at any debt level (docs/DESIGN.md §11).
+    lvl_debt: jax.Array              # int32[num_levels]
 
 
 def level_view(cfg: LSMConfig, state: LSMState, i: int):
@@ -134,11 +141,9 @@ def arena_view(state: LSMState):
     return jnp.concatenate(state.key_vars), jnp.concatenate(state.values)
 
 
-def _placebo(n):
-    return (
-        jnp.full((n,), sem.PLACEBO_KV, dtype=jnp.int32),
-        jnp.full((n,), sem.EMPTY_VALUE, dtype=jnp.int32),
-    )
+# Single definition lives in the cascade engine; re-exported here because
+# cleanup/distributed/facade code historically imports it from this module.
+_placebo = cascade._placebo
 
 
 def _fresh_buffer(b: int) -> dict:
@@ -181,68 +186,17 @@ def lsm_init(cfg: LSMConfig) -> LSMState:
         values=tuple(vals),
         r=jnp.zeros((), dtype=jnp.int32),
         overflowed=jnp.zeros((), dtype=bool),
+        lvl_debt=jnp.zeros((cfg.num_levels,), dtype=jnp.int32),
         **_fresh_buffer(cfg.batch_size),
     )
 
 
-def _cascade(cfg: LSMConfig, state: LSMState, carry_kv, carry_val) -> LSMState:
-    """Push one pre-sorted b-wide batch through the binary-counter cascade.
-
-    The carry must be ascending in original key with the newest element first
-    within every equal-key segment (the run invariant every query assumes).
-    Both batch-formation rules feed this: `lsm_update` sorts by full key
-    variable (paper §4.1 — tombstone-first within a batch) and the write
-    buffer sorts by arrival sequence (docs/DESIGN.md §5 — newest-first).
-
-    Per level, one of three things happens (lax.switch):
-      0 keep  — level above the carry path: buffer passes through untouched;
-      1 place — first empty level: receives the carry;
-      2 clear — full level consumed by the carry merge: reset to placebos.
-
-    Buffer fields pass through untouched.
-    """
-    would_overflow = state.r >= cfg.max_batches
-    placed = jnp.asarray(False)
-    new_kvs = list(state.key_vars)
-    new_vals = list(state.values)
-
-    for i in range(cfg.num_levels):
-        lvl_kv, lvl_val = new_kvs[i], new_vals[i]
-        n = cfg.level_size(i)
-        full = ((state.r >> i) & 1) == 1
-        do_merge = full & ~placed & ~would_overflow
-        do_place = (~full) & (~placed) & ~would_overflow
-
-        case = do_merge.astype(jnp.int32) * 2 + do_place.astype(jnp.int32)
-        new_kvs[i], new_vals[i] = jax.lax.switch(
-            case,
-            [
-                lambda lk, lv, ck, cv: (lk, lv),            # keep
-                lambda lk, lv, ck, cv: (ck, cv),            # place carry
-                lambda lk, lv, ck, cv, n=n: _placebo(n),    # cleared by merge
-            ],
-            lvl_kv, lvl_val, carry_kv, carry_val,
-        )
-
-        if i + 1 < cfg.num_levels:
-            def _merge(ck, cv, lk, lv):
-                return ops.merge_sorted(ck, cv, lk, lv)
-
-            def _skip(ck, cv, lk, lv, n=n):
-                pk, pv = _placebo(n)
-                return jnp.concatenate([ck, pk]), jnp.concatenate([cv, pv])
-
-            carry_kv, carry_val = jax.lax.cond(
-                do_merge, _merge, _skip, carry_kv, carry_val, lvl_kv, lvl_val
-            )
-        placed = placed | do_place
-
-    return state._replace(
-        key_vars=tuple(new_kvs),
-        values=tuple(new_vals),
-        r=jnp.where(would_overflow, state.r, state.r + 1),
-        overflowed=state.overflowed | would_overflow,
-    )
+# The binary-counter increment itself lives in the shared cascade engine
+# (core/cascade.py): ONE lax.switch branch per placement level, each doing a
+# single fused K-way merge of [carry, level 0..j-1] — the old pairwise
+# cond-chain copied the carry past every level above the placement, making
+# each update O(b * 2^L) regardless of where it landed.
+_cascade = cascade.push_batch
 
 
 def lsm_update(cfg: LSMConfig, state: LSMState, key_vars, values) -> LSMState:
@@ -367,20 +321,9 @@ def _redistribute(cfg: LSMConfig, compact_kv, compact_val, r_new):
     Level i (if bit i of r_new is set) receives the contiguous slice starting
     at b * (r_new & (2**i - 1)) — smallest keys land in the smallest levels
     (paper §4.5). Keys are unique after cleanup, so cross-level recency is
-    irrelevant.
+    irrelevant. (Thin alias of the engine's prefix-aware version.)
     """
-    b = cfg.batch_size
-    kvs, vals = [], []
-    for i in range(cfg.num_levels):
-        n = cfg.level_size(i)
-        bit = ((r_new >> i) & 1) == 1
-        src_start = b * (r_new & ((1 << i) - 1))
-        sl_kv = jax.lax.dynamic_slice(compact_kv, (src_start,), (n,))
-        sl_val = jax.lax.dynamic_slice(compact_val, (src_start,), (n,))
-        pk, pv = _placebo(n)
-        kvs.append(jnp.where(bit, sl_kv, pk))
-        vals.append(jnp.where(bit, sl_val, pv))
-    return tuple(kvs), tuple(vals)
+    return cascade.redistribute(cfg, compact_kv, compact_val, r_new)
 
 
 def lsm_bulk_build(cfg: LSMConfig, keys, values) -> LSMState:
@@ -406,6 +349,7 @@ def lsm_bulk_build(cfg: LSMConfig, keys, values) -> LSMState:
         values=vals,
         r=jnp.asarray(k, jnp.int32),
         overflowed=jnp.zeros((), dtype=bool),
+        lvl_debt=jnp.zeros((cfg.num_levels,), dtype=jnp.int32),
         **_fresh_buffer(cfg.batch_size),
     )
 
@@ -413,3 +357,9 @@ def lsm_bulk_build(cfg: LSMConfig, keys, values) -> LSMState:
 def lsm_num_elements(cfg: LSMConfig, state: LSMState):
     """Resident element count (including stale elements): r * b + staged."""
     return state.r * cfg.batch_size + state.buf_n
+
+
+def lsm_debt(cfg: LSMConfig, state: LSMState):
+    """Total compaction debt (int32 scalar): the per-level stale-resident
+    estimate summed over levels. What `lsm_maintain` budgets against."""
+    return jnp.sum(state.lvl_debt).astype(jnp.int32)

@@ -43,8 +43,17 @@ INT32_MAX = jnp.iinfo(jnp.int32).max
 
 
 def lookup_runs(runs, query_keys):
-    """LOOKUP(k) over newest-first runs: first matching run wins; tombstone → ⊥."""
+    """LOOKUP(k) over newest-first runs: first matching run wins; tombstone → ⊥.
+
+    On the Pallas backend the whole resolution collapses into one fused
+    streaming kernel over the concatenated runs (`ops.lookup_runs_fused`);
+    the per-run loop below is the XLA path and the semantic reference the
+    fused kernel is tested against (tests/test_fused_kernels.py).
+    """
     query_keys = jnp.asarray(query_keys, jnp.int32)
+    fused = ops.lookup_runs_fused(runs, query_keys)
+    if fused is not None:
+        return fused
     nq = query_keys.shape[0]
     resolved = jnp.zeros((nq,), dtype=bool)
     found = jnp.zeros((nq,), dtype=bool)
@@ -176,12 +185,10 @@ def survivor_mask(key_vars):
 def valid_count_runs(runs):
     """Number of live (visible) elements across newest-first runs.
 
-    Shared by every run-based backend (`Dictionary.size`): stable-merge the
-    runs newest-first, then count the survivors.
+    Shared by every run-based backend (`Dictionary.size`): one K-way stable
+    newest-first merge of the runs, then count the survivors.
     """
-    merged_kv, merged_val = runs[0]
-    for lvl_kv, lvl_val in runs[1:]:
-        merged_kv, merged_val = ops.merge_sorted(merged_kv, merged_val, lvl_kv, lvl_val)
+    merged_kv, _ = ops.merge_cascade(runs)
     return jnp.sum(survivor_mask(merged_kv)).astype(jnp.int32)
 
 

@@ -162,3 +162,150 @@ def merge_path(a_kv, a_val, b_kv, b_val, *, compare_full=False, interpret=False)
         interpret=interpret,
     )(bounds, a_stack, a_stack, b_stack, b_stack)
     return out[0], out[1]
+
+
+# ---------------------------------------------------------------------------
+# K-way cascade merge: stream K runs through VMEM in one pallas_call
+# ---------------------------------------------------------------------------
+#
+# A binary-counter cascade step merges the carry batch with levels 0..j-1 —
+# previously a CHAIN of pairwise merge_path calls, each round-tripping the
+# growing intermediate through HBM (the carry is written and re-read j times).
+# The K-way kernel generalizes Merge Path: the diagonal partition becomes a
+# *key-space* binary search (`cascade_partition`) that splits ALL K runs at
+# every output-tile boundary simultaneously, and each grid step merges its K
+# windows in VMEM with K-1 rank-based all-pairs merges. Every input element
+# crosses HBM exactly once, regardless of K.
+
+
+def cascade_partition(runs_keys, diags):
+    """K-way Merge-Path split: bounds[s, d] = #elements of run s among the
+    first diags[d] outputs of the K-way merge.
+
+    Runs are ordered newest first; ties on the comparison key resolve by run
+    order (earlier run first), and within a run by index — identical to a
+    left fold of pairwise merges with the accumulated (newer) side winning
+    ties, which is what `ref.merge_cascade_ref` computes.
+
+    Instead of searching each diagonal's simplex directly (K-dimensional), we
+    binary-search the KEY SPACE: for diagonal d find the smallest key k* with
+    N_leq(k*) >= d (31 halvings over the int32 key domain, each a vectorized
+    searchsorted per run over all diagonals at once). The first d outputs are
+    then all elements with key < k*, plus t = d - N_less(k*) elements of the
+    key == k* segments taken in run order.
+    """
+    diags = jnp.asarray(diags, jnp.int32)
+    lo = jnp.zeros_like(diags)
+    hi = jnp.full_like(diags, _INT32_MAX)
+    for _ in range(31):
+        mid = lo + (hi - lo) // 2
+        n_leq = sum(
+            jnp.searchsorted(ks, mid, side="right").astype(jnp.int32)
+            for ks in runs_keys
+        )
+        pred = n_leq >= diags
+        hi = jnp.where(pred, mid, hi)
+        lo = jnp.where(pred, lo, mid + 1)
+    kstar = lo  # d == 0 degenerates to kstar == 0, bounds 0 (keys are >= 0)
+    lbs = [jnp.searchsorted(ks, kstar, side="left").astype(jnp.int32) for ks in runs_keys]
+    ubs = [jnp.searchsorted(ks, kstar, side="right").astype(jnp.int32) for ks in runs_keys]
+    n_less = sum(lbs)
+    t = diags - n_less  # elements still needed from the key == k* segments
+    bounds = []
+    prefix = jnp.zeros_like(diags)
+    for lb, ub in zip(lbs, ubs):
+        seg = ub - lb
+        bounds.append(lb + jnp.clip(t - prefix, 0, seg))
+        prefix = prefix + seg
+    return jnp.stack(bounds)  # [K, len(diags)]
+
+
+def _cascade_kernel(bounds_ref, *refs, ns, shift):
+    """Merge one BLOCK-wide output tile from K run windows.
+
+    refs: 2 fetched blocks per run (adjacent BLOCK-blocks covering its
+    window), then the output ref. The K windows (total length exactly BLOCK)
+    fold left-to-right with the same rank-based all-pairs merge as
+    `_merge_kernel`; the accumulated side is the newer one (earlier runs), so
+    it takes ties with `<=`. Lanes beyond each side's valid length carry
+    _INT32_MAX comparison keys: their ranks land at or beyond the combined
+    valid length (accumulated side) or beyond BLOCK entirely (window side), so
+    they never corrupt valid output lanes.
+    """
+    o_ref = refs[-1]
+    t = pl.program_id(0)
+    lane = jnp.arange(BLOCK, dtype=jnp.int32)
+    acc_kv = acc_val = acc_len = None
+    for s in range(len(ns)):
+        start = bounds_ref[s, t]
+        ln = bounds_ref[s, t + 1] - start
+        blk = jnp.minimum(start // BLOCK, ns[s] // BLOCK - 1)
+        buf = jnp.concatenate([refs[2 * s][...], refs[2 * s + 1][...]], axis=1)
+        kv, val, _ = _window(buf, start, blk, ln, _INT32_MAX)
+        cmp = kv >> shift if shift else kv
+        cmp = jnp.where(lane < ln, cmp, _INT32_MAX)
+        if acc_kv is None:
+            acc_kv, acc_val, acc_len = kv, val, ln
+            continue
+        acc_cmp = acc_kv >> shift if shift else acc_kv
+        acc_cmp = jnp.where(lane < acc_len, acc_cmp, _INT32_MAX)
+        rank_a = lane + jnp.sum((cmp[None, :] < acc_cmp[:, None]).astype(jnp.int32), axis=1)
+        rank_b = lane + jnp.sum((acc_cmp[None, :] <= cmp[:, None]).astype(jnp.int32), axis=1)
+        new_kv = jnp.zeros((BLOCK,), jnp.int32)
+        new_val = jnp.zeros((BLOCK,), jnp.int32)
+        acc_kv = new_kv.at[rank_a].set(acc_kv, mode="drop").at[rank_b].set(kv, mode="drop")
+        acc_val = new_val.at[rank_a].set(acc_val, mode="drop").at[rank_b].set(val, mode="drop")
+        acc_len = acc_len + ln
+    o_ref[0, :] = acc_kv
+    o_ref[1, :] = acc_val
+
+
+def merge_cascade_path(runs_kv, runs_val, *, compare_full=False, interpret=False):
+    """K-way merge of sorted runs, newest first. Lengths multiples of BLOCK.
+
+    Semantics match a left fold of `merge_path` (equivalently
+    `ref.merge_cascade_ref`), but each element crosses HBM once instead of
+    once per fold step.
+    """
+    k = len(runs_kv)
+    assert k >= 1 and len(runs_val) == k
+    if k == 1:
+        return runs_kv[0], runs_val[0]
+    ns = [kv.shape[0] for kv in runs_kv]
+    assert all(n % BLOCK == 0 for n in ns), ns
+    total = sum(ns)
+    n_tiles = total // BLOCK
+    shift = 0 if compare_full else 1
+    run_keys = [(kv >> shift) if shift else kv for kv in runs_kv]
+    diags = jnp.arange(n_tiles + 1, dtype=jnp.int32) * BLOCK
+    bounds = cascade_partition(run_keys, diags)  # [K, n_tiles + 1]
+
+    stacks = [jnp.stack([kv, val]) for kv, val in zip(runs_kv, runs_val)]
+
+    def make_idx(s, delta, nblocks):
+        def idx(t, bounds):
+            return (0, jnp.minimum(bounds[s, t] // BLOCK + delta, nblocks - 1))
+
+        return idx
+
+    in_specs = []
+    operands = []
+    for s in range(k):
+        nblocks = ns[s] // BLOCK
+        in_specs.append(pl.BlockSpec((2, BLOCK), make_idx(s, 0, nblocks)))
+        in_specs.append(pl.BlockSpec((2, BLOCK), make_idx(s, 1, nblocks)))
+        operands.extend([stacks[s], stacks[s]])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((2, BLOCK), lambda t, bounds: (0, t)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_cascade_kernel, ns=tuple(ns), shift=shift),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((2, total), jnp.int32),
+        interpret=interpret,
+    )(bounds, *operands)
+    return out[0], out[1]

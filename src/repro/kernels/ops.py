@@ -58,6 +58,38 @@ def merge_sorted(a_kv, a_val, b_kv, b_val):
     return ref.merge_ref(a_kv, a_val, b_kv, b_val)
 
 
+def merge_cascade(runs):
+    """K-way stable merge of sorted runs ordered NEWEST FIRST.
+
+    runs: [(key_vars, values), ...]; ties on original key resolve to the
+    earliest (newest) run, within a run to the earliest index — identical to
+    a left fold of `merge_sorted` with the accumulated side as `a`.
+
+    One binary-counter cascade step, a cleanup, and `valid_count_runs` are all
+    K-way merges; on the Pallas backend they stream every element through VMEM
+    exactly once (`merge_path.merge_cascade_path`) instead of paying one HBM
+    round trip of the growing intermediate per fold step.
+    """
+    runs = [(jnp.asarray(kv, jnp.int32), jnp.asarray(v, jnp.int32)) for kv, v in runs]
+    if len(runs) == 1:
+        return runs[0]
+    if _BACKEND == "pallas":
+        from repro.kernels import merge_path
+
+        if all(
+            kv.shape[0] % merge_path.BLOCK == 0 and kv.shape[0] >= merge_path.BLOCK
+            for kv, _ in runs
+        ):
+            return merge_path.merge_cascade_path(
+                [kv for kv, _ in runs], [v for _, v in runs], interpret=_INTERPRET
+            )
+    # XLA fold (pairwise merges may still pick the pairwise Pallas kernel).
+    out_kv, out_val = runs[0]
+    for kv, val in runs[1:]:
+        out_kv, out_val = merge_sorted(out_kv, out_val, kv, val)
+    return out_kv, out_val
+
+
 def sort_pairs(key_vars, values):
     """Sort (key_var, value) pairs by full key variable, stable."""
     if _BACKEND == "pallas":
@@ -125,6 +157,42 @@ def upper_bound(sorted_orig_keys, query_keys):
             )
             return jnp.where(safe, lo, jnp.asarray(n, jnp.int32))
     return ref.upper_bound_ref(sorted_orig_keys, query_keys)
+
+
+def lookup_runs_fused(runs, query_keys):
+    """Fused multi-run LOOKUP dispatch: (found, values) or None.
+
+    Selected on the Pallas backend: concatenates the newest-first runs into
+    one flat array (placebo-padded to the chunk size), pads the queries to the
+    query-block size, and issues ONE fused streaming kernel instead of one
+    `lower_bound` launch per run (`lsm_lookup.fused_lookup_runs`). Returns
+    None when not selected — the caller (core/queries.py::lookup_runs) falls
+    back to the per-run resolution loop.
+    """
+    if _BACKEND != "pallas":
+        return None
+    from repro.core import semantics as sem
+    from repro.kernels import lsm_lookup
+
+    chunk = lsm_lookup.FUSED_CHUNK
+    qb = lsm_lookup.FUSED_QUERY_BLOCK
+    flat_kv = jnp.concatenate([jnp.asarray(kv, jnp.int32) for kv, _ in runs])
+    flat_val = jnp.concatenate([jnp.asarray(v, jnp.int32) for _, v in runs])
+    pad_n = -flat_kv.shape[0] % chunk
+    if pad_n:
+        flat_kv = jnp.concatenate([flat_kv, jnp.full((pad_n,), sem.PLACEBO_KV, jnp.int32)])
+        flat_val = jnp.concatenate([flat_val, jnp.full((pad_n,), sem.EMPTY_VALUE, jnp.int32)])
+    qk = jnp.asarray(query_keys, jnp.int32)
+    nq = qk.shape[0]
+    pad_q = -nq % qb
+    qk_padded = jnp.concatenate([qk, jnp.full((pad_q,), sem.PLACEBO_KEY, jnp.int32)]) if pad_q else qk
+    best_kv, best_val = lsm_lookup.fused_lookup_runs(
+        flat_kv, flat_val, qk_padded, interpret=_INTERPRET
+    )
+    best_kv, best_val = best_kv[:nq], best_val[:nq]
+    hit = sem.original_key(best_kv) == qk
+    found = hit & ~sem.is_tombstone(best_kv)
+    return found, jnp.where(found, best_val, sem.EMPTY_VALUE)
 
 
 def lookup_level(level_kv, level_val, query_keys):

@@ -39,6 +39,38 @@ def merge_ref(a_kv, a_val, b_kv, b_val):
     return out_kv, out_val
 
 
+def merge_cascade_ref(runs_kv, runs_val):
+    """K-way stable newest-first merge as a left fold of pairwise merges.
+
+    The pairwise merge is associative under the newest-first tie rule (the
+    accumulated side is always the newer one), so the fold is element-for-
+    element identical to a true K-way priority merge — this is the semantic
+    oracle for `merge_path.merge_cascade_path`.
+    """
+    out_kv, out_val = runs_kv[0], runs_val[0]
+    for kv, val in zip(runs_kv[1:], runs_val[1:]):
+        out_kv, out_val = merge_ref(out_kv, out_val, kv, val)
+    return out_kv, out_val
+
+
+def fused_lookup_ref(flat_kv, flat_val, query_keys):
+    """Oracle for the fused multi-run lookup kernel: first flat match wins.
+
+    O(q * n) dense match matrix — test oracle only; the production XLA
+    fallback for lookups is the per-run loop in core/queries.py (per-run
+    searchsorted is O(q log n)).
+    """
+    flat_kv = jnp.asarray(flat_kv, jnp.int32)
+    flat_val = jnp.asarray(flat_val, jnp.int32)
+    query_keys = jnp.asarray(query_keys, jnp.int32)
+    match = sem.original_key(flat_kv)[None, :] == query_keys[:, None]
+    any_match = match.any(axis=1)
+    first = jnp.argmax(match, axis=1)
+    best_kv = jnp.where(any_match, flat_kv[first], sem.PLACEBO_KV)
+    best_val = jnp.where(any_match, flat_val[first], sem.EMPTY_VALUE)
+    return best_kv, best_val
+
+
 def sort_ref(key_vars, values):
     """Sort a batch by FULL key variable (status bit included), stable.
 

@@ -54,6 +54,12 @@ class PageTableConfig:
     num_levels: int = 12
     backend: str = "lsm"           # any Dictionary backend with update support
     flush_threshold: int | None = None  # facade flush policy (None: overflow-only)
+    # Budgeted incremental compaction between admission/eviction steps: every
+    # pt_allocate / pt_evict piggybacks index.maintain(maintenance_budget)
+    # behind a traced debt check, so tombstone/stale debt from evictions is
+    # reclaimed in bounded slices instead of stop-the-world pt_compact spikes
+    # on the decode path. None: no piggyback (compact explicitly).
+    maintenance_budget: int | None = None
 
     def make_index(self) -> Dictionary:
         # validate=False: keys come from page_key(), never user input, and the
@@ -61,6 +67,7 @@ class PageTableConfig:
         return Dictionary.create(
             self.backend, batch_size=self.update_batch, num_levels=self.num_levels,
             validate=False, flush_threshold=self.flush_threshold,
+            maintenance_budget=self.maintenance_budget,
         )
 
 
@@ -162,3 +169,17 @@ def pt_compact(cfg: PageTableConfig, state: PageTableState) -> PageTableState:
     staged updates in — the cleanup-boundary flush)."""
     del cfg
     return PageTableState(state.index.cleanup(), state.free_count, state.free_list)
+
+
+def pt_maintain(cfg: PageTableConfig, state: PageTableState,
+                budget: int | None = None) -> PageTableState:
+    """Explicit budgeted compaction of the index — the bounded-latency
+    alternative to pt_compact for the serving loop. Touches at most `budget`
+    resident translations (default: cfg.maintenance_budget; None degrades to
+    a full cleanup). Translations stay exact at any debt level, so this can
+    run between any two admission steps."""
+    if budget is None:
+        budget = cfg.maintenance_budget
+    return PageTableState(
+        state.index.maintain(budget), state.free_count, state.free_list
+    )

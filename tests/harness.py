@@ -1,9 +1,9 @@
 """Cross-backend differential test harness for the `Dictionary` facade.
 
 One randomized op sequence (insert / delete / mixed update / cleanup /
-explicit flush, with ragged non-multiple-of-b lengths, duplicate keys,
-tombstone churn, and boundary keys at 0 / MAX_USER_KEY / shard boundaries)
-is replayed against:
+explicit flush / budgeted maintain, with ragged non-multiple-of-b lengths,
+duplicate keys, tombstone churn, and boundary keys at 0 / MAX_USER_KEY /
+shard boundaries) is replayed against:
 
   * a Python-dict oracle that models the facade's documented duplicate
     semantics *exactly* — the write-buffer recency rule: lanes apply in
@@ -64,15 +64,29 @@ def key_pool(rng: np.random.Generator, extra: int = 24, shard_counts=SHARD_COUNT
     return np.array(sorted(pool), dtype=np.int64)
 
 
+def maintain_budgets(batch_size: int):
+    """Budget menu for ('maintain', budget) ops: prefix sizes that select
+    level 0 / levels 0-1 / levels 0-2, plus None (degrades to full cleanup).
+    All are valid for every backend — maintenance is a no-op where
+    unsupported (run_differential skips those handles)."""
+    return (batch_size, 3 * batch_size, 7 * batch_size, None)
+
+
 def gen_ops(rng: np.random.Generator, pool, *, n_steps=8, batch_size=8,
-            p_cleanup=0.12, p_delete=0.35, p_flush=0.1, max_batches=3):
-    """Op sequence: ('update', keys, vals, dels) | ('cleanup',) | ('flush',).
+            p_cleanup=0.12, p_delete=0.35, p_flush=0.1, p_maintain=0.12,
+            max_batches=3):
+    """Op sequence: ('update', keys, vals, dels) | ('cleanup',) | ('flush',)
+    | ('maintain', budget).
 
     Update lengths span 1..max_batches*b + 1 and are deliberately not
     multiples of batch_size (exercises the write-buffer staging and the
     facade's compact/split), keys are drawn with replacement (duplicates),
     and values include negatives (exercises the sharded psum combine).
+    Maintain ops draw a random budget from `maintain_budgets` — like cleanup
+    and flush they must be observationally invisible, which is exactly what
+    the oracle comparison enforces.
     """
+    budgets = maintain_budgets(batch_size)
     ops = []
     for _ in range(n_steps):
         roll = rng.random()
@@ -81,6 +95,9 @@ def gen_ops(rng: np.random.Generator, pool, *, n_steps=8, batch_size=8,
             continue
         if roll < p_cleanup + p_flush:
             ops.append(("flush",))
+            continue
+        if roll < p_cleanup + p_flush + p_maintain:
+            ops.append(("maintain", budgets[int(rng.integers(len(budgets)))]))
             continue
         n = int(rng.integers(1, max_batches * batch_size + 2))
         keys = rng.choice(pool, n)
@@ -99,7 +116,7 @@ def oracle_apply(oracle: dict, op) -> None:
     into one flush batch (unlike the paper's in-batch tombstone-first rule).
     Cleanup and flush are semantically invisible.
     """
-    if op[0] in ("cleanup", "flush"):
+    if op[0] in ("cleanup", "flush", "maintain"):
         return
     _, keys, vals, dels = op
     for k, v, d in zip(keys, vals, dels):
@@ -181,6 +198,14 @@ def run_differential(dicts: dict, ops, *, plan: QueryPlan,
             dicts = {name: d.cleanup() for name, d in dicts.items()}
         elif op[0] == "flush":
             dicts = {name: d.flush() for name, d in dicts.items()}
+        elif op[0] == "maintain":
+            # No-op for backends without maintenance support — the point of
+            # the check is that maintaining backends stay bit-identical to
+            # the ones that never compact.
+            dicts = {
+                name: d.maintain(op[1]) if d.capabilities.supports_maintenance else d
+                for name, d in dicts.items()
+            }
         else:
             _, keys, vals, dels = op
             dicts = {

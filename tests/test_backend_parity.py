@@ -28,6 +28,7 @@ from harness import (
     boundary_keys,
     gen_ops,
     key_pool,
+    maintain_budgets,
     query_ranges,
     range_size,
     run_differential,
@@ -117,6 +118,22 @@ class TestDifferentialParity:
         pool = np.array([0, 3, 5, sem.MAX_USER_KEY], dtype=np.int64)
         ops = gen_ops(rng, pool, n_steps=10, batch_size=B,
                       p_cleanup=0.2, p_delete=0.5, max_batches=2)
+        k1, k2 = query_ranges(pool)
+        run_differential(
+            _make_backends(num_shards), ops,
+            plan=PLAN, query_keys=_queries(pool), k1=k1, k2=k2,
+        )
+
+    @pytest.mark.parametrize("num_shards", SHARD_PARAMS)
+    def test_maintain_heavy_churn(self, num_shards):
+        """Budgeted maintenance interleaved with every flavor of churn must be
+        observationally invisible on every backend (sorted_array, which has no
+        maintain, doubles as the never-compacted control)."""
+        rng = np.random.default_rng(11)
+        pool = key_pool(rng)
+        ops = gen_ops(rng, pool, n_steps=10, batch_size=B,
+                      p_cleanup=0.05, p_delete=0.45, p_maintain=0.4)
+        assert any(op[0] == "maintain" for op in ops)
         k1, k2 = query_ranges(pool)
         run_differential(
             _make_backends(num_shards), ops,
@@ -392,8 +409,14 @@ if HAVE_HYPOTHESIS:
         n_steps = draw(st.integers(1, 6))
         ops = []
         for _ in range(n_steps):
-            if draw(st.integers(0, 7)) == 0:
+            roll = draw(st.integers(0, 9))
+            if roll == 0:
                 ops.append(("cleanup",))
+                continue
+            if roll == 1:
+                budgets = maintain_budgets(B)
+                ops.append(("maintain",
+                            budgets[draw(st.integers(0, len(budgets) - 1))]))
                 continue
             n = draw(st.integers(1, 3 * B))
             idx = draw(st.lists(st.integers(0, len(_POOL) - 1),

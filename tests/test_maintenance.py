@@ -1,0 +1,320 @@
+"""Budgeted incremental maintenance (ISSUE 7): core + facade + sharded.
+
+Pins the contracts documented in core/cleanup.py and docs/DESIGN.md §11:
+
+  * maintain compacts the deepest level PREFIX its static budget affords and
+    is observationally invisible to every query at any budget;
+  * maintain(None) / maintain(>= capacity + b) degrades to full cleanup;
+  * tombstones survive a prefix compaction while deeper levels hold
+    residents, and are purged once the prefix covers everything;
+  * per-level debt (LSMState.lvl_debt) accumulates when cascade merges
+    materialize runs with shadowed duplicates, resets for compacted
+    prefixes, and gates only_if_debt piggybacking;
+  * maintenance never overflows and never touches the write buffer;
+  * the facade exposes maintain()/maintenance_budget= with CapabilityError
+    on non-maintaining backends, and the sharded backend maintains
+    shard-locally.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Dictionary
+from repro.api.backend import CapabilityError
+from repro.core import (
+    LSMConfig,
+    all_runs,
+    lsm_cleanup,
+    lsm_debt,
+    lsm_init,
+    lsm_maintain,
+    lsm_update,
+)
+from repro.core import semantics as sem
+from repro.core.cleanup import maintain_prefix_level
+from repro.core.queries import lookup_runs
+
+B = 64
+CFG = LSMConfig(batch_size=B, num_levels=4)  # capacity 64 * 15 = 960
+
+
+def _ins_batch(keys, vals):
+    kv = ((np.asarray(keys, np.int32) << 1) | 1).astype(np.int32)
+    return jnp.array(kv), jnp.array(np.asarray(vals, np.int32))
+
+
+def _del_batch(keys):
+    kv = (np.asarray(keys, np.int32) << 1).astype(np.int32)
+    return jnp.array(kv), jnp.zeros(len(keys), jnp.int32)
+
+
+def _dup_heavy_state(n_batches=7, key_space=100, seed=3):
+    """Apply n_batches full batches of unique-per-batch keys drawn from a
+    small space: heavy cross-batch shadowing -> real compaction debt."""
+    rng = np.random.default_rng(seed)
+    state = lsm_init(CFG)
+    oracle = {}
+    for _ in range(n_batches):
+        keys = rng.choice(key_space, B, replace=False)
+        vals = rng.integers(1, 1000, B)
+        state = lsm_update(CFG, state, *_ins_batch(keys, vals))
+        for k, v in zip(keys.tolist(), vals.tolist()):
+            oracle[int(k)] = int(v)
+    return state, oracle
+
+
+def _check_oracle(cfg, state, oracle, hi, tag):
+    q = jnp.arange(hi, dtype=jnp.int32)
+    found, vals = lookup_runs(all_runs(cfg, state), q)
+    found, vals = np.asarray(found), np.asarray(vals)
+    exp_f = np.array([k in oracle for k in range(hi)])
+    np.testing.assert_array_equal(found, exp_f, err_msg=tag)
+    exp_v = np.array([oracle.get(k, 0) for k in range(hi)])
+    np.testing.assert_array_equal(
+        np.where(found, vals, 0), np.where(exp_f, exp_v, 0), err_msg=tag
+    )
+
+
+class TestBudgetSelection:
+    def test_prefix_level_thresholds(self):
+        b = CFG.batch_size
+        assert maintain_prefix_level(CFG, b - 1) == -1        # below level 0
+        assert maintain_prefix_level(CFG, b) == 0             # exactly level 0
+        assert maintain_prefix_level(CFG, 3 * b - 1) == 0
+        assert maintain_prefix_level(CFG, 3 * b) == 1         # levels 0-1
+        assert maintain_prefix_level(CFG, 7 * b) == 2
+        assert maintain_prefix_level(CFG, 15 * b) == 3        # whole structure
+
+    def test_below_b_budget_is_identity(self):
+        state, _ = _dup_heavy_state()
+        out = lsm_maintain(CFG, state, CFG.batch_size - 1)
+        for a, b_ in zip(jax.tree_util.tree_leaves(state),
+                         jax.tree_util.tree_leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+    def test_huge_budget_is_full_cleanup(self):
+        state, _ = _dup_heavy_state()
+        via_maintain = lsm_maintain(CFG, state, CFG.capacity + CFG.batch_size)
+        via_none = lsm_maintain(CFG, state, None)
+        via_cleanup = lsm_cleanup(CFG, state)
+        for a, b_, c in zip(jax.tree_util.tree_leaves(via_maintain),
+                            jax.tree_util.tree_leaves(via_none),
+                            jax.tree_util.tree_leaves(via_cleanup)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+class TestMaintainSemantics:
+    @pytest.mark.parametrize("budget_batches", [1, 3, 7, 15])
+    def test_queries_invariant_at_every_budget(self, budget_batches):
+        state, oracle = _dup_heavy_state()
+        out = lsm_maintain(CFG, state, budget_batches * CFG.batch_size)
+        _check_oracle(CFG, out, oracle, 110, f"budget={budget_batches}b")
+        assert not bool(out.overflowed)
+
+    def test_prefix_r_shrinks_and_debt_resets(self):
+        state, _ = _dup_heavy_state()      # r == 7: levels 0,1,2 resident
+        assert int(state.r) == 7
+        assert int(lsm_debt(CFG, state)) > 0
+        out = lsm_maintain(CFG, state, 3 * CFG.batch_size)  # prefix j=1
+        # Levels 0-1 compacted (bits 0-1 of r recomputed), level 2 untouched.
+        assert int(out.r) & ~0b11 == 0b100
+        np.testing.assert_array_equal(np.asarray(out.lvl_debt[:2]), [0, 0])
+        np.testing.assert_array_equal(
+            np.asarray(out.lvl_debt[2:]), np.asarray(state.lvl_debt[2:])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out.key_vars[2]), np.asarray(state.key_vars[2])
+        )
+
+    def test_write_buffer_untouched(self):
+        state, oracle = _dup_heavy_state()
+        # Stage 5 elements into the buffer, then maintain: buffer must survive.
+        from repro.core import lsm_stage
+
+        extra = np.array([901, 902, 903, 904, 905])
+        kv, vals = _ins_batch(
+            np.concatenate([extra, np.full(B - 5, sem.PLACEBO_KEY)]),
+            np.concatenate([extra, np.zeros(B - 5)]),
+        )
+        kv = jnp.where(jnp.arange(B) < 5, kv, sem.PLACEBO_KV)
+        state = lsm_stage(CFG, state, kv, vals, jnp.asarray(5, jnp.int32))
+        for k in extra.tolist():
+            oracle[int(k)] = int(k)
+        out = lsm_maintain(CFG, state, 7 * CFG.batch_size)
+        assert int(out.buf_n) == 5
+        _check_oracle(CFG, out, oracle, 950, "buffer survives maintain")
+
+    def test_tombstone_survives_partial_compaction(self):
+        """Key lives deep (level 2); its tombstone lands in the prefix. A
+        prefix-only maintain must KEEP the tombstone (covers_all false) and
+        the key must stay deleted."""
+        state = lsm_init(CFG)
+        rng = np.random.default_rng(5)
+        victim = 42
+        # 4 batches -> r=4 (level 2 holds the oldest data incl. the victim).
+        first = np.concatenate([[victim], rng.choice(
+            np.setdiff1d(np.arange(200), [victim]), B - 1, replace=False)])
+        state = lsm_update(CFG, state, *_ins_batch(first, first))
+        for i in range(3):
+            ks = rng.choice(np.arange(200, 500), B, replace=False)
+            state = lsm_update(CFG, state, *_ins_batch(ks, ks))
+        assert int(state.r) == 4
+        # Tombstone the victim (placebo-padded batch) -> lands at level 0.
+        tomb = np.concatenate([[victim], np.full(B - 1, sem.PLACEBO_KEY)])
+        kv = jnp.array((tomb.astype(np.int32) << 1).astype(np.int32))
+        kv = jnp.where(jnp.arange(B) == 0, kv, sem.PLACEBO_KV)
+        state = lsm_update(CFG, state, kv, jnp.zeros(B, jnp.int32))
+        assert int(state.r) == 5
+        out = lsm_maintain(CFG, state, CFG.batch_size)  # level 0 only
+        found, _ = lookup_runs(all_runs(CFG, out), jnp.array([victim]))
+        assert not bool(np.asarray(found)[0]), "tombstone was wrongly purged"
+        # Full cleanup afterwards really purges it.
+        out = lsm_maintain(CFG, out, None)
+        found, _ = lookup_runs(all_runs(CFG, out), jnp.array([victim]))
+        assert not bool(np.asarray(found)[0])
+
+    def test_tombstone_purged_when_prefix_covers_all(self):
+        """With every resident batch inside the prefix, maintain may purge
+        tombstones — matching cleanup's live-element count."""
+        state = lsm_init(CFG)
+        keys = np.arange(B)
+        state = lsm_update(CFG, state, *_ins_batch(keys, keys))
+        state = lsm_update(CFG, state, *_del_batch(keys))
+        assert int(state.r) == 2  # levels 0 and 1 resident
+        out = lsm_maintain(CFG, state, 3 * CFG.batch_size)  # covers r=2 prefix
+        assert int(out.r) == 0  # everything annihilated
+        found, _ = lookup_runs(all_runs(CFG, out), jnp.array(keys))
+        assert not np.asarray(found).any()
+
+
+class TestDebtTracking:
+    def test_debt_accumulates_on_shadowing_and_resets_on_cleanup(self):
+        state, _ = _dup_heavy_state()
+        assert int(lsm_debt(CFG, state)) > 0
+        clean = lsm_cleanup(CFG, state)
+        assert int(lsm_debt(CFG, clean)) == 0
+        np.testing.assert_array_equal(
+            np.asarray(clean.lvl_debt), np.zeros(CFG.num_levels, np.int32)
+        )
+
+    def test_unique_keys_carry_no_debt(self):
+        state = lsm_init(CFG)
+        for i in range(3):
+            ks = np.arange(i * B, (i + 1) * B)
+            state = lsm_update(CFG, state, *_ins_batch(ks, ks))
+        assert int(lsm_debt(CFG, state)) == 0
+
+    def test_only_if_debt_skips_debt_free_prefix(self):
+        state = lsm_init(CFG)
+        for i in range(3):
+            ks = np.arange(i * B, (i + 1) * B)
+            state = lsm_update(CFG, state, *_ins_batch(ks, ks))
+        out = lsm_maintain(CFG, state, 3 * B, only_if_debt=True)
+        for a, b_ in zip(jax.tree_util.tree_leaves(state),
+                         jax.tree_util.tree_leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+    def test_only_if_debt_fires_on_debt(self):
+        state, oracle = _dup_heavy_state()
+        assert int(np.asarray(state.lvl_debt[:2]).sum()) > 0
+        out = lsm_maintain(CFG, state, 3 * B, only_if_debt=True)
+        assert int(np.asarray(out.lvl_debt[:2]).sum()) == 0
+        _check_oracle(CFG, out, oracle, 110, "only_if_debt fired")
+
+
+class TestFacadeMaintenance:
+    def test_capability_row(self):
+        assert Dictionary.create("lsm", batch_size=B, num_levels=3) \
+            .capabilities.supports_maintenance
+        assert not Dictionary.create("sorted_array").capabilities.supports_maintenance
+        assert not Dictionary.create("cuckoo").capabilities.supports_maintenance
+
+    def test_unsupported_backend_raises_with_alternatives(self):
+        with pytest.raises(CapabilityError, match="lsm"):
+            Dictionary.create("sorted_array").maintain(128)
+        with pytest.raises(CapabilityError, match="maintain"):
+            Dictionary.create("cuckoo", maintenance_budget=128)
+
+    def test_budget_validation(self):
+        with pytest.raises(ValueError, match="maintenance_budget"):
+            Dictionary.create("lsm", batch_size=B, num_levels=3,
+                              maintenance_budget=0)
+        d = Dictionary.create("lsm", batch_size=B, num_levels=3)
+        with pytest.raises(ValueError, match="budget"):
+            d.maintain(0)
+
+    def test_explicit_budget_beats_configured(self):
+        d = Dictionary.create("lsm", batch_size=B, num_levels=4,
+                              maintenance_budget=B)
+        rng = np.random.default_rng(0)
+        for _ in range(7):
+            ks = rng.choice(100, B, replace=False)
+            d = d.insert(ks, ks + 1)
+        d = d.flush()
+        full = d.maintain(budget=10 ** 9)  # explicit: full cleanup
+        assert int(jnp.sum(full.state.lvl_debt)) == 0
+        assert int(full.state.r) == int(np.ceil(int(full.size()) / B))
+
+    def test_piggyback_bounds_debt_under_churn(self):
+        """With maintenance_budget configured, update-path piggybacking must
+        keep the tracked prefix debt at zero after every call."""
+        budget = 3 * B
+        d = Dictionary.create("lsm", batch_size=B, num_levels=4,
+                              flush_threshold=1, maintenance_budget=budget)
+        rng = np.random.default_rng(1)
+        oracle = {}
+        for _ in range(8):
+            ks = rng.choice(80, B, replace=False)
+            vs = rng.integers(1, 1000, B)
+            d = d.insert(ks, vs)
+            for k, v in zip(ks.tolist(), vs.tolist()):
+                oracle[int(k)] = int(v)
+            assert int(jnp.sum(d.state.lvl_debt[:2])) == 0
+        q = np.arange(90)
+        found, vals = d.lookup(q)
+        found = np.asarray(found)
+        np.testing.assert_array_equal(found, [k in oracle for k in range(90)])
+
+    def test_maintain_survives_pytree_roundtrip(self):
+        import jax.tree_util as jtu
+
+        d = Dictionary.create("lsm", batch_size=B, num_levels=3,
+                              maintenance_budget=2 * B)
+        leaves, treedef = jtu.tree_flatten(d)
+        d2 = jtu.tree_unflatten(treedef, leaves)
+        assert d2._maintenance_budget == 2 * B
+        d2.maintain()  # must not raise
+
+
+class TestShardedMaintenance:
+    @pytest.mark.parametrize("num_shards", [
+        pytest.param(1, id="shards1"),
+        pytest.param(2, marks=pytest.mark.skipif(
+            len(jax.devices()) < 2, reason="needs 2 host devices"), id="shards2"),
+        pytest.param(4, marks=pytest.mark.skipif(
+            len(jax.devices()) < 4, reason="needs 4 host devices"), id="shards4"),
+    ])
+    def test_shard_local_maintain_is_invisible(self, num_shards):
+        d = Dictionary.create("lsm_sharded", batch_size=B, num_levels=4,
+                              num_shards=num_shards)
+        rng = np.random.default_rng(2)
+        oracle = {}
+        for _ in range(6):
+            ks = rng.choice(200, B, replace=False).astype(np.int64)
+            # Spread across the whole domain so every shard owns some keys.
+            ks = ks * (sem.MAX_USER_KEY // 200)
+            vs = rng.integers(1, 1000, B)
+            d = d.insert(ks, vs)
+            for k, v in zip(ks.tolist(), vs.tolist()):
+                oracle[int(k)] = int(v)
+            d = d.maintain(3 * B)
+            q = np.array(sorted(oracle), dtype=np.int64)
+            found, vals = d.lookup(q)
+            assert np.asarray(found).all()
+            np.testing.assert_array_equal(
+                np.asarray(vals), [oracle[int(k)] for k in q]
+            )
+        assert int(d.size()) == len(oracle)

@@ -12,6 +12,7 @@ from repro.serve.kvcache import (
     pt_evict,
     pt_init,
     pt_lookup,
+    pt_maintain,
     pt_seq_page_count,
     pt_seq_pages,
 )
@@ -87,6 +88,39 @@ class TestPageTable:
             np.where(np.asarray(f2), np.asarray(s2), -1),
         )
         assert int(state.lsm.r) <= 1  # cleanup shrank the structure
+
+    def test_maintain_keeps_translations_exact_under_churn(self):
+        # Two page tables driven by the identical admission/eviction churn:
+        # one plain, one with piggybacked maintenance AND an explicit
+        # pt_maintain between steps. Translations must be indistinguishable.
+        cfg_m = PageTableConfig(num_pages=128, update_batch=16, num_levels=6,
+                                maintenance_budget=3 * 16)
+        plain, maint = pt_init(CFG), pt_init(cfg_m)
+        rng = np.random.default_rng(7)
+        b = CFG.update_batch
+        for step in range(6):
+            seqs = rng.integers(1, 5, b).astype(np.int32)
+            pages = rng.integers(0, 8, b).astype(np.int32)
+            valid = jnp.asarray(np.arange(b) < 12)
+            sj, pj = jnp.asarray(seqs), jnp.asarray(pages)
+            plain, _ = pt_allocate(CFG, plain, sj, pj, valid)
+            maint, _ = pt_allocate(cfg_m, maint, sj, pj, valid)
+            if step % 2:
+                plain = pt_evict(CFG, plain, sj, pj, valid)
+                maint = pt_evict(cfg_m, maint, sj, pj, valid)
+            maint = pt_maintain(cfg_m, maint)
+        qs = jnp.asarray(np.repeat(np.arange(1, 5, dtype=np.int32), 8))
+        qp = jnp.asarray(np.tile(np.arange(8, dtype=np.int32), 4))
+        f1, s1 = pt_lookup(CFG, plain, qs, qp)
+        f2, s2 = pt_lookup(cfg_m, maint, qs, qp)
+        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+        np.testing.assert_array_equal(
+            np.where(np.asarray(f1), np.asarray(s1), -1),
+            np.where(np.asarray(f2), np.asarray(s2), -1),
+        )
+        assert int(maint.free_count) == int(plain.free_count)
+        # the piggyback + explicit sweeps kept the affordable prefix clean
+        assert int(np.asarray(maint.lsm.lvl_debt)[:2].sum()) == 0
 
 
 class TestPipeline:

@@ -27,6 +27,7 @@ def main() -> None:
         common,
         fig2_effective_rate,
         kernel_bench,
+        serve_bench,
         sharded_bench,
         streaming_bench,
         table2_insertion,
@@ -51,6 +52,7 @@ def main() -> None:
                                              num_batches=8 if args.quick else 16,
                                              nq=512 if args.quick else 2048),
         "streaming": lambda: streaming_bench.run(smoke=args.quick),
+        "serve": lambda: serve_bench.run(smoke=args.quick),
     }
     selected = args.only.split(",") if args.only else list(benches)
     print("name,us_per_call,derived")

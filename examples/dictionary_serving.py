@@ -20,6 +20,14 @@ On CPU, widen the device pool first:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     PYTHONPATH=src python examples/dictionary_serving.py --sharded
+
+Continuous-batching variant (`--server`): many tenants' op streams
+multiplexed onto ONE shared dictionary by `repro.serve.DictionaryServer` —
+mixed decode-trickle / prefill-burst / eviction-storm traffic coalesces into
+per-kind device steps, with live write-buffer occupancy, flush-cost, and
+coalescing stats reported as the trace drains:
+
+  PYTHONPATH=src python examples/dictionary_serving.py --server
 """
 
 import functools
@@ -153,8 +161,62 @@ def sharded_variant():
           f"count[0,2^20)={int(counts[0])} exact={bool(ok[0])}")
 
 
+def server_variant():
+    """Mixed-tenant traffic through the continuous-batching server: live
+    occupancy / flush-cost / coalescing reporting while the trace drains."""
+    from repro.serve import DictionaryServer, ServerConfig, make_trace
+    from repro.serve.kvcache import ServerPageTable
+
+    srv = DictionaryServer(ServerConfig(
+        backend="lsm", batch_size=64, num_levels=10,
+        flush_at_fraction=0.75, maintenance_budget=128))
+    tenants, trace = make_trace(
+        "mixed", num_tenants=6, key_space=512, events=48, seed=0)
+    for t in tenants:
+        srv.register_tenant(t, key_space=512)
+    # The KV page table rides along as just another tenant of the same
+    # shared dictionary.
+    pt = ServerPageTable(srv, num_pages=64, num_seqs=8)
+    pt.allocate([0, 0, 1], [0, 1, 0])
+
+    print(f"server: {len(tenants)} traffic tenants + page table over one "
+          f"'{srv.config.backend}' dictionary (b={srv.config.batch_size})")
+    tickets, window = [], 12
+    for i, op in enumerate(trace):
+        if op.kind == "update":
+            tickets.append(srv.submit_update(op.tenant, op.keys, op.values,
+                                             op.is_delete))
+        elif op.kind == "lookup":
+            tickets.append(srv.submit_lookup(op.tenant, op.keys))
+        elif op.kind == "count":
+            tickets.append(srv.submit_count(op.tenant, op.k1, op.k2))
+        else:
+            tickets.append(srv.submit_range(op.tenant, op.k1, op.k2,
+                                            op.max_results))
+        if (i + 1) % window == 0 or i == len(trace) - 1:
+            srv.step()
+            occ = srv.occupancy()
+            print(f"  after {i + 1:3d} ops: pending={srv.pending_estimate()} "
+                  f"(device: {int(occ.pending)}) resident={int(occ.resident)} "
+                  f"debt={int(occ.debt)} "
+                  f"flush_cost={int(srv.dictionary.flush_cost_estimate())} "
+                  f"flushes={srv.stats.flushes}")
+    stats = srv.drain()
+    n_found = sum(
+        int(np.asarray(t.result()[0]).sum())
+        for t in tickets if t.kind == "lookup")
+    counts, _ = pt.seq_page_count([0, 1]).result()
+    print(f"drained: {stats.submitted} ops -> {stats.device_steps} device "
+          f"steps ({stats.ops_per_device_step:.1f} ops/step), "
+          f"flushes={stats.flushes} maintains={stats.maintains}")
+    print(f"lookup hits across tenants: {n_found}; page table intact: "
+          f"pages/seq={np.asarray(counts).tolist()} free={pt.free_count}")
+
+
 if __name__ == "__main__":
     if "--sharded" in sys.argv:
         sharded_variant()
+    elif "--server" in sys.argv:
+        server_variant()
     else:
         main()

@@ -34,6 +34,7 @@ from repro.api.backend import (  # noqa: F401
     Capabilities,
     CapabilityError,
     KeyDomainError,
+    OccupancyStats,
     available_backends,
     get_backend_class,
     register_backend,

@@ -16,12 +16,25 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Any, ClassVar, Dict, Tuple, Type
+from typing import Any, ClassVar, Dict, NamedTuple, Tuple, Type
 
 from repro.api.plan import QueryPlan
 
 # Backend state is an arbitrary pytree (LSMState, SAState, CuckooTable, ...).
 BackendState = Any
+
+
+class OccupancyStats(NamedTuple):
+    """Cheap structural introspection for serving schedulers (int32 scalars).
+
+    Unlike `size()` these never run query machinery — they read counters the
+    state already carries, so a server can poll them between coalesced steps
+    without paying a multi-run scan.
+    """
+
+    pending: Any   # staged write-buffer elements awaiting a flush
+    resident: Any  # elements resident in the main structure (stale included)
+    debt: Any      # estimated reclaimable stale elements (maintenance target)
 
 
 class CapabilityError(NotImplementedError):
@@ -80,6 +93,13 @@ class Backend(abc.ABC):
         return self.capacity
 
     @property
+    def has_write_buffer(self) -> bool:
+        """Does this backend stage updates in a write buffer (flush/pending
+        are meaningful) rather than applying them immediately? Serving
+        schedulers gate their occupancy/flush policies on this."""
+        return False
+
+    @property
     def num_shards(self) -> int:
         """Device partitions behind this backend (1 = single-device).
 
@@ -130,6 +150,27 @@ class Backend(abc.ABC):
 
     def pending_count(self, state: BackendState):
         """Staged-but-unflushed element count (int32 scalar; 0 if unbuffered)."""
+        del state
+        import jax.numpy as jnp
+
+        return jnp.zeros((), jnp.int32)
+
+    def occupancy(self, state: BackendState) -> OccupancyStats:
+        """Structural occupancy counters (see OccupancyStats). The default
+        derives everything from pending_count — backends with richer state
+        (resident batches, debt trackers) override with cheaper/fuller reads."""
+        import jax.numpy as jnp
+
+        zero = jnp.zeros((), jnp.int32)
+        return OccupancyStats(
+            pending=self.pending_count(state), resident=zero, debt=zero
+        )
+
+    def flush_cost(self, state: BackendState):
+        """Estimated elements a `flush_state` would touch *now* (int32 scalar;
+        0 when nothing is staged). Serving schedulers weigh this against
+        buffer occupancy when choosing a flush point; backends without a
+        buffer flush for free."""
         del state
         import jax.numpy as jnp
 

@@ -41,7 +41,12 @@ import math
 
 import jax.numpy as jnp
 
-from repro.api.backend import Backend, Capabilities, register_backend
+from repro.api.backend import (
+    Backend,
+    Capabilities,
+    OccupancyStats,
+    register_backend,
+)
 from repro.api.plan import QueryPlan
 from repro.core import cleanup as lsm_cleanup_mod
 from repro.core import cuckoo as ck
@@ -52,7 +57,9 @@ from repro.core.lsm import (
     LSMConfig,
     all_runs,
     lsm_bulk_build,
+    lsm_debt,
     lsm_flush,
+    lsm_flush_cost,
     lsm_init,
     lsm_stage,
     lsm_update,
@@ -103,6 +110,10 @@ class LSMBackend(Backend):
         # Levels plus the b write-buffer slots a query window can overlap.
         return self.cfg.capacity + self.cfg.batch_size
 
+    @property
+    def has_write_buffer(self) -> bool:
+        return True
+
     def init(self):
         return lsm_init(self.cfg)
 
@@ -120,6 +131,16 @@ class LSMBackend(Backend):
 
     def pending_count(self, state):
         return state.buf_n
+
+    def occupancy(self, state):
+        return OccupancyStats(
+            pending=state.buf_n,
+            resident=state.r * self.cfg.batch_size,
+            debt=lsm_debt(self.cfg, state),
+        )
+
+    def flush_cost(self, state):
+        return lsm_flush_cost(self.cfg, state)
 
     def lookup(self, state, keys):
         return queries.lookup_runs(all_runs(self.cfg, state), keys)
@@ -224,6 +245,10 @@ class ShardedLSMBackend(Backend):
     def num_shards(self) -> int:
         return self.cfg.num_shards
 
+    @property
+    def has_write_buffer(self) -> bool:
+        return True
+
     def init(self):
         return dist.dist_lsm_init(self.cfg, self.mesh)
 
@@ -241,6 +266,13 @@ class ShardedLSMBackend(Backend):
 
     def pending_count(self, state):
         return dist.dist_pending(self.cfg, self.mesh, state)
+
+    def occupancy(self, state):
+        pending, resident, debt = dist.dist_occupancy(self.cfg, self.mesh, state)
+        return OccupancyStats(pending=pending, resident=resident, debt=debt)
+
+    def flush_cost(self, state):
+        return dist.dist_flush_cost(self.cfg, self.mesh, state)
 
     def lookup(self, state, keys):
         return dist.dist_lookup(self.cfg, self.mesh, state, keys)
@@ -318,6 +350,12 @@ class SortedArrayBackend(Backend):
         # elements are the newest run either way, so queries agree with the
         # buffered LSM backends lane-for-lane (flush_state is a no-op).
         return sa.sa_stage(self.cfg, state, key_vars, values, count)
+
+    def occupancy(self, state):
+        # No buffer, no debt tracker: everything lives in the one run. n
+        # counts stale duplicates until the next update's recency merge.
+        zero = jnp.zeros((), jnp.int32)
+        return OccupancyStats(pending=zero, resident=state.n, debt=zero)
 
     def _runs(self, state):
         return [(state.key_vars, state.values)]

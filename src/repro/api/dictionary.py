@@ -140,6 +140,14 @@ def _exec_pending(backend, state):
     return backend.pending_count(state)
 
 
+def _exec_occupancy(backend, state):
+    return backend.occupancy(state)
+
+
+def _exec_flush_cost(backend, state):
+    return backend.flush_cost(state)
+
+
 def _exec_bulk_build(backend, keys, values):
     return backend.bulk_build(keys, values)
 
@@ -302,6 +310,12 @@ class Dictionary:
         return self._backend.num_shards
 
     @property
+    def buffered(self) -> bool:
+        """Does this backend stage updates in a write buffer (pending/flush
+        meaningful)? False for apply-immediately backends."""
+        return self._backend.has_write_buffer
+
+    @property
     def state(self):
         """The underlying core state (LSMState / SAState / CuckooTable)."""
         return self._state
@@ -461,6 +475,29 @@ class Dictionary:
 
         For sharded backends this sums the shard-local buffers."""
         f = _cached_exec(self._backend, "pending", _exec_pending)
+        return f(self._state)
+
+    def occupancy(self):
+        """OccupancyStats(pending, resident, debt) — structural counters for
+        serving schedulers (repro.serve.server's admission/flush policy).
+
+        Reads counters the state already carries (no query machinery), so
+        polling between coalesced device steps is cheap: `pending` is the
+        write-buffer occupancy, `resident` the main-structure elements (stale
+        included — r*b for the LSM), `debt` the reclaimable-stale estimate
+        that `maintain()` budgets against. Sharded backends psum all three."""
+        f = _cached_exec(self._backend, "occupancy", _exec_occupancy)
+        return f(self._state)
+
+    def flush_cost_estimate(self):
+        """Estimated elements a `flush()` would touch now (int32 scalar; 0
+        when nothing is staged or the backend has no buffer).
+
+        For the LSM this is the cascade merge the carried batch triggers —
+        b * (trailing_ones(r) + 1) — so a scheduler can tell a cheap flush
+        (empty low levels) from one that will cascade deep, and time forced
+        flushes accordingly. Sharded backends sum the shard-local costs."""
+        f = _cached_exec(self._backend, "flush_cost", _exec_flush_cost)
         return f(self._state)
 
     # -- queries -------------------------------------------------------------

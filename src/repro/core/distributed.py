@@ -63,7 +63,9 @@ from repro.core.lsm import (
     _placebo,
     _redistribute,
     compact_real,
+    lsm_debt,
     lsm_flush,
+    lsm_flush_cost,
     lsm_init,
     lsm_stage,
     lsm_update,
@@ -195,6 +197,41 @@ def dist_pending(cfg: DistLSMConfig, mesh, states):
 
     def body(states):
         return jax.lax.psum(_local_state(states).buf_n, cfg.axis)
+
+    f = shard_map(body, mesh=mesh, in_specs=(state_spec,), out_specs=P(),
+                  check_vma=False)
+    return f(states)
+
+
+def dist_occupancy(cfg: DistLSMConfig, mesh, states):
+    """(pending, resident, debt) int32 scalars summed across shards.
+
+    Shard-local reads + three psums — cheap enough for a serving scheduler to
+    poll between coalesced steps (no query machinery runs)."""
+    state_spec = P(cfg.axis)
+
+    def body(states):
+        local = _local_state(states)
+        pending = jax.lax.psum(local.buf_n, cfg.axis)
+        resident = jax.lax.psum(local.r * cfg.local.batch_size, cfg.axis)
+        debt = jax.lax.psum(lsm_debt(cfg.local, local), cfg.axis)
+        return pending, resident, debt
+
+    f = shard_map(body, mesh=mesh, in_specs=(state_spec,),
+                  out_specs=(P(), P(), P()), check_vma=False)
+    return f(states)
+
+
+def dist_flush_cost(cfg: DistLSMConfig, mesh, states):
+    """Total elements every shard's cascade would touch on a flush now (psum
+    of the shard-local `lsm_flush_cost`; shards flush independently, so the
+    sum is the whole-device-step work estimate)."""
+    state_spec = P(cfg.axis)
+
+    def body(states):
+        return jax.lax.psum(
+            lsm_flush_cost(cfg.local, _local_state(states)), cfg.axis
+        )
 
     f = shard_map(body, mesh=mesh, in_specs=(state_spec,), out_specs=P(),
                   check_vma=False)

@@ -363,3 +363,22 @@ def lsm_debt(cfg: LSMConfig, state: LSMState):
     """Total compaction debt (int32 scalar): the per-level stale-resident
     estimate summed over levels. What `lsm_maintain` budgets against."""
     return jnp.sum(state.lvl_debt).astype(jnp.int32)
+
+
+def lsm_flush_cost(cfg: LSMConfig, state: LSMState):
+    """Elements the cascade would touch if the buffer flushed *now* (int32
+    scalar; 0 when the buffer is empty).
+
+    Pushing one batch into the binary counter merges through the trailing-one
+    levels of r (each full level is carried), so the merge reads and rewrites
+    b * (trailing_ones(r) + 1) arena elements. This is the cost the serving
+    scheduler weighs against buffer occupancy when deciding whether to flush
+    early or keep absorbing trickles (repro.serve.server admission policy).
+    """
+    trailing = jnp.zeros((), jnp.int32)
+    run = jnp.ones((), bool)
+    for lvl in range(cfg.num_levels):
+        run = run & (((state.r >> lvl) & 1) == 1)
+        trailing = trailing + run.astype(jnp.int32)
+    cost = cfg.batch_size * (trailing + 1)
+    return jnp.where(state.buf_n > 0, cost, 0).astype(jnp.int32)

@@ -5,8 +5,17 @@
 
 The full configs lower on the production mesh via launch/dryrun.py; this
 driver executes reduced configs on the local devices with the same code path
-(apply_prefill / apply_decode + PageTable admission/eviction), reporting
+(apply_prefill / apply_decode + page-table admission/eviction), reporting
 tokens/s and page-index statistics.
+
+The page table is driven through the continuous-batching `DictionaryServer`
+(repro.serve.server): admissions, evictions, and per-sequence page counts are
+submitted as ragged tenant ops and coalesce into shared device steps instead
+of issuing one padded `pt_*` call each. The wave report includes the server's
+step-coalescing stats (ops per device step, forced flushes, maintains)
+alongside tokens/s — the serving-side evidence for the paper's batched-rate
+claim. Pass --direct to fall back to the standalone `pt_*` path for
+comparison.
 """
 
 from __future__ import annotations
@@ -22,8 +31,98 @@ import numpy as np
 from repro.configs.base import ARCH_IDS, get_config, get_smoke_config
 from repro.models import model_zoo as zoo
 from repro.serve.kvcache import (
-    PageTableConfig, pt_allocate, pt_compact, pt_evict, pt_init, pt_seq_page_count,
+    PageTableConfig, ServerPageTable, pt_allocate, pt_compact, pt_evict,
+    pt_init, pt_seq_page_count,
 )
+from repro.serve.server import DictionaryServer, ServerConfig
+
+
+def _run_direct(args, cfg, params, decode, rng):
+    """Standalone pt_* path: one padded device call per page-table op."""
+    pt_cfg = PageTableConfig(num_pages=1024, update_batch=64, num_levels=10)
+    table = pt_init(pt_cfg)
+    total_tokens = 0
+    t0 = time.perf_counter()
+    n_waves = (args.requests + args.batch - 1) // args.batch
+    for wave in range(n_waves):
+        seq_ids, seqs, pages, token, caches, cache_len = _prefill_wave(
+            args, cfg, params, rng, wave)
+        b = pt_cfg.update_batch
+        table, _ = pt_allocate(
+            pt_cfg, table,
+            jnp.asarray(np.resize(seqs, b)), jnp.asarray(np.resize(pages, b)),
+            jnp.asarray(np.arange(b) < len(seqs)))
+        for _ in range(args.gen_tokens):
+            logits, caches = decode(params, token, caches, cache_len)
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            cache_len = cache_len + 1
+            total_tokens += args.batch
+        counts, _ = pt_seq_page_count(pt_cfg, table, jnp.asarray(seq_ids), 256)
+        print(f"wave {wave}: generated {args.gen_tokens} tok/seq; "
+              f"pages/seq={np.asarray(counts).tolist()} free={int(table.free_count)}")
+        table = pt_evict(
+            pt_cfg, table,
+            jnp.asarray(np.resize(seqs, b)), jnp.asarray(np.resize(pages, b)),
+            jnp.asarray(np.arange(b) < len(seqs)))
+    table = pt_compact(pt_cfg, table)
+    dt = time.perf_counter() - t0
+    print(f"served {args.requests} requests, {total_tokens} tokens in {dt:.1f}s "
+          f"({total_tokens/dt:.1f} tok/s); index compacted to r={int(table.lsm.r)}")
+
+
+def _run_server(args, cfg, params, decode, rng):
+    """Server path: the page table is a tenant; ragged ops coalesce."""
+    srv = DictionaryServer(ServerConfig(
+        backend="lsm", batch_size=64, num_levels=10, maintenance_budget=128))
+    pt = ServerPageTable(srv, num_pages=1024, num_seqs=max(256, args.requests))
+    total_tokens = 0
+    t0 = time.perf_counter()
+    n_waves = (args.requests + args.batch - 1) // args.batch
+    for wave in range(n_waves):
+        seq_ids, seqs, pages, token, caches, cache_len = _prefill_wave(
+            args, cfg, params, rng, wave)
+        # Ragged admission: no resize-to-batch padding — the server buckets.
+        _slots, _ = pt.allocate(seqs, pages)
+        count_ticket = pt.seq_page_count(seq_ids)
+        for _ in range(args.gen_tokens):
+            logits, caches = decode(params, token, caches, cache_len)
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            cache_len = cache_len + 1
+            total_tokens += args.batch
+        counts, _ = count_ticket.result()   # steps the server loop
+        print(f"wave {wave}: generated {args.gen_tokens} tok/seq; "
+              f"pages/seq={np.asarray(counts).tolist()} free={pt.free_count}")
+        pt.evict(seqs, pages)
+    stats = srv.drain()          # queued evict tombstones land first...
+    srv.cleanup()                # ...then the stop-the-world compaction
+    jax.block_until_ready(srv.dictionary.state)
+    dt = time.perf_counter() - t0
+    print(f"served {args.requests} requests, {total_tokens} tokens in {dt:.1f}s "
+          f"({total_tokens/dt:.1f} tok/s); index compacted to "
+          f"r={int(srv.dictionary.state.r)}")
+    print(f"server: {stats.submitted} ops in {stats.device_steps} device steps "
+          f"({stats.ops_per_device_step:.2f} ops/step), "
+          f"flushes={stats.flushes} maintains={stats.maintains} "
+          f"lanes={stats.lanes_by_kind}")
+
+
+def _prefill_wave(args, cfg, params, rng, wave):
+    seq_ids = (np.arange(args.batch) + wave * args.batch).astype(np.int32)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)}
+    if cfg.has_vision_stub:
+        batch["patch_embeds"] = jnp.zeros(
+            (args.batch, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    logits, caches = zoo.apply_prefill(
+        cfg, params, batch, cache_pad_to=args.prompt_len + args.gen_tokens +
+        (cfg.num_patches if cfg.has_vision_stub else 0))
+    n_pages = max(1, args.prompt_len // args.page_size)
+    seqs = np.repeat(seq_ids, n_pages)
+    pages = np.tile(np.arange(n_pages, dtype=np.int32), args.batch)
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    cache_len = jnp.asarray(
+        args.prompt_len + (cfg.num_patches if cfg.has_vision_stub else 0), jnp.int32)
+    return seq_ids, seqs, pages, token, caches, cache_len
 
 
 def main(argv=None):
@@ -35,6 +134,8 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-tokens", type=int, default=32)
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--direct", action="store_true",
+                    help="standalone pt_* path (no server coalescing)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -42,53 +143,11 @@ def main(argv=None):
         raise SystemExit("enc-dec serving path: use examples/dictionary_serving.py patterns")
     params = zoo.init_params(cfg, jax.random.PRNGKey(0))
     decode = jax.jit(functools.partial(zoo.apply_decode, cfg))
-    pt_cfg = PageTableConfig(num_pages=1024, update_batch=64, num_levels=10)
-    table = pt_init(pt_cfg)
     rng = np.random.default_rng(0)
-
-    total_tokens = 0
-    t0 = time.perf_counter()
-    n_waves = (args.requests + args.batch - 1) // args.batch
-    for wave in range(n_waves):
-        seq_ids = (np.arange(args.batch) + wave * args.batch).astype(np.int32)
-        batch = {"tokens": jnp.asarray(
-            rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)}
-        if cfg.has_vision_stub:
-            batch["patch_embeds"] = jnp.zeros(
-                (args.batch, cfg.num_patches, cfg.d_model), jnp.bfloat16)
-        logits, caches = zoo.apply_prefill(
-            cfg, params, batch, cache_pad_to=args.prompt_len + args.gen_tokens +
-            (cfg.num_patches if cfg.has_vision_stub else 0))
-        # admit prompt pages
-        n_pages = max(1, args.prompt_len // args.page_size)
-        b = pt_cfg.update_batch
-        seqs = np.repeat(seq_ids, n_pages)
-        pages = np.tile(np.arange(n_pages, dtype=np.int32), args.batch)
-        table, _ = pt_allocate(
-            pt_cfg, table,
-            jnp.asarray(np.resize(seqs, b)), jnp.asarray(np.resize(pages, b)),
-            jnp.asarray(np.arange(b) < len(seqs)))
-
-        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        cache_len = jnp.asarray(
-            args.prompt_len + (cfg.num_patches if cfg.has_vision_stub else 0), jnp.int32)
-        for t in range(args.gen_tokens):
-            logits, caches = decode(params, token, caches, cache_len)
-            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-            cache_len = cache_len + 1
-            total_tokens += args.batch
-        counts, _ = pt_seq_page_count(pt_cfg, table, jnp.asarray(seq_ids), 256)
-        print(f"wave {wave}: generated {args.gen_tokens} tok/seq; "
-              f"pages/seq={np.asarray(counts).tolist()} free={int(table.free_count)}")
-        # retire the wave
-        table = pt_evict(
-            pt_cfg, table,
-            jnp.asarray(np.resize(seqs, b)), jnp.asarray(np.resize(pages, b)),
-            jnp.asarray(np.arange(b) < len(seqs)))
-    table = pt_compact(pt_cfg, table)
-    dt = time.perf_counter() - t0
-    print(f"served {args.requests} requests, {total_tokens} tokens in {dt:.1f}s "
-          f"({total_tokens/dt:.1f} tok/s); index compacted to r={int(table.lsm.r)}")
+    if args.direct:
+        _run_direct(args, cfg, params, decode, rng)
+    else:
+        _run_server(args, cfg, params, decode, rng)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+"""Serving layer: continuous-batching dictionary server + tenants.
+
+`DictionaryServer` multiplexes many logical clients onto one device-resident
+`Dictionary`, namespacing tenant keys into the shared 30-bit key space and
+coalescing queued ops into per-op-kind device steps. `traffic` generates
+serving-shaped multi-tenant op traces; `kvcache` is the KV-cache page table,
+expressible either standalone (`pt_*`) or as a tenant of the server
+(`ServerPageTable`).
+"""
+
+from repro.serve.server import (
+    DictionaryServer,
+    ServerConfig,
+    ServerStats,
+    Tenant,
+    Ticket,
+)
+from repro.serve.traffic import TraceOp, TrafficGen, make_trace
+
+__all__ = [
+    "DictionaryServer",
+    "ServerConfig",
+    "ServerStats",
+    "Tenant",
+    "Ticket",
+    "TraceOp",
+    "TrafficGen",
+    "make_trace",
+]

@@ -41,6 +41,7 @@ import dataclasses
 from typing import NamedTuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api import Dictionary, QueryPlan
 
@@ -183,3 +184,133 @@ def pt_maintain(cfg: PageTableConfig, state: PageTableState,
     return PageTableState(
         state.index.maintain(budget), state.free_count, state.free_list
     )
+
+
+# -- the page table as a server tenant ----------------------------------------
+
+
+class _MappedTicket:
+    """A server Ticket with a post-resolution transform (decode global keys
+    back into (page_idx, slot) rows)."""
+
+    __slots__ = ("_inner", "_fn")
+
+    def __init__(self, inner, fn):
+        self._inner = inner
+        self._fn = fn
+
+    def result(self):
+        return self._fn(self._inner.result())
+
+
+class ServerPageTable:
+    """The KV page table re-expressed as one tenant of a `DictionaryServer`.
+
+    The standalone `pt_*` path above owns a whole `Dictionary` and pads every
+    ragged admission to `update_batch` itself. Under a server, the page table
+    becomes *just another client*: it registers the tenant namespace
+    ``seq_id * pages_per_seq + page_idx`` (the packing trick the server
+    generalizes), submits ragged ops, and lets the scheduler coalesce them
+    with every other tenant's traffic into shared device steps — the
+    admission trickle of one model replica no longer costs a device call per
+    decode step.
+
+    Differences from the standalone path, forced by the move:
+
+    * The free list lives host-side (a python stack). Slot choice is a
+      host decision made at submit time; only the *mapping* is device state.
+    * `allocate` returns the slots immediately (host free list) plus the
+      update ticket; `evict` is a lookup ticket resolved through the server
+      loop (coalescing with anything else queued) followed by a tombstone
+      submit for the found keys.
+    * Flush/compaction policy belongs to the server (its admission policy +
+      `maintenance_budget`), not to this tenant.
+    """
+
+    def __init__(self, server, num_pages: int, name: str = "kvcache",
+                 num_seqs: int = 256, pages_per_seq: int = MAX_PAGES_PER_SEQ):
+        self.server = server
+        self.name = name
+        self.num_pages = int(num_pages)
+        self.pages_per_seq = int(pages_per_seq)
+        self.num_seqs = int(num_seqs)
+        # May raise KeyDomainError — the shared key space is a real resource.
+        self.tenant = server.register_tenant(
+            name, key_space=self.num_seqs * self.pages_per_seq)
+        self._free = list(range(self.num_pages - 1, -1, -1))
+
+    # -- key packing (tenant-local) -------------------------------------------
+
+    def _keys(self, seq_ids, page_idxs) -> np.ndarray:
+        s = np.asarray(seq_ids, np.int64)
+        p = np.asarray(page_idxs, np.int64)
+        if (s >= self.num_seqs).any():
+            raise ValueError(
+                f"seq_id >= num_seqs={self.num_seqs}; widen the tenant")
+        return s * self.pages_per_seq + p
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    # -- ops ------------------------------------------------------------------
+
+    def allocate(self, seq_ids, page_idxs):
+        """Admit logical pages: pop physical slots host-side, queue the
+        (page -> slot) inserts. Returns (slots, ticket) — the slots are
+        usable immediately (writing KV bytes into the pool does not need the
+        index), the ticket resolves once the insert's coalesced step runs."""
+        keys = self._keys(seq_ids, page_idxs)
+        n = len(keys)
+        if n > len(self._free):
+            raise RuntimeError(
+                f"KV pool exhausted: need {n} pages, {len(self._free)} free")
+        slots = np.asarray([self._free.pop() for _ in range(n)], np.int32)
+        ticket = self.server.submit_update(self.name, keys, slots)
+        return slots, ticket
+
+    def lookup(self, seq_ids, page_idxs):
+        """Translate logical pages -> slots; ticket resolves to
+        (found, slots)."""
+        return self.server.submit_lookup(self.name, self._keys(seq_ids, page_idxs))
+
+    def evict(self, seq_ids, page_idxs) -> int:
+        """Retire pages: resolve a translation through the server loop
+        (coalescing with queued traffic), push found slots back onto the free
+        list, tombstone the found keys. Returns the number of pages freed."""
+        keys = self._keys(seq_ids, page_idxs)
+        found, slots = self.server.submit_lookup(self.name, keys).result()
+        freed = np.asarray(slots)[np.asarray(found)]
+        self._free.extend(int(s) for s in freed)
+        live = keys[np.asarray(found)]
+        if len(live):
+            self.server.submit_update(
+                self.name, live, np.zeros(len(live), np.int32),
+                is_delete=np.ones(len(live), bool))
+        return len(freed)
+
+    def seq_page_count(self, seq_ids):
+        """COUNT over each sequence's key range; ticket -> (counts, ok)."""
+        s = np.asarray(seq_ids, np.int64)
+        return self.server.submit_count(
+            self.name, self._keys(s, np.zeros_like(s)),
+            self._keys(s, np.full_like(s, self.pages_per_seq - 1)))
+
+    def seq_pages(self, seq_ids, max_pages: int):
+        """RANGE over each sequence's key range; ticket ->
+        (page_idx[n, max_pages] with -1 padding, slots, counts, ok)."""
+        s = np.asarray(seq_ids, np.int64)
+        inner = self.server.submit_range(
+            self.name, self._keys(s, np.zeros_like(s)),
+            self._keys(s, np.full_like(s, self.pages_per_seq - 1)),
+            max_results=max_pages)
+
+        def decode(res):
+            from repro.core import semantics as sem
+
+            keys, slots, counts, ok = res
+            page_idx = np.where(
+                keys != sem.PLACEBO_KEY, keys % self.pages_per_seq, -1)
+            return page_idx, slots, counts, ok
+
+        return _MappedTicket(inner, decode)
